@@ -1,0 +1,48 @@
+"""Benchmark harness entry point (``python -m benchmarks.run``).
+
+One section per paper table/figure:
+  * Table 1 (studies A/B/C) — reduced-scale reproduction on SynthFEMNIST
+    (``benchmarks/table1.py`` runs the full sweep; here we run a compact
+    A + C slice so the harness finishes in CPU-budget time).
+  * Figure 1 behaviour — the online-adjustment trace (backtracking events)
+    is exercised inside study C and reported as a derived column.
+  * Microbenches — operators, server aggregation, Algorithm-1 candidates
+    (``name,us_per_call,derived`` CSV rows).
+
+Dry-run/roofline numbers are produced by ``python -m repro.launch.dryrun``
+(they need the 512-device XLA override and are therefore not run from
+here); see EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def main() -> None:
+    print("# === microbenches (name,us_per_call,derived) ===", flush=True)
+    from benchmarks import microbench
+
+    microbench.main()
+
+    print("# === paper Table 1 (reduced scale; see benchmarks/table1.py "
+          "--full for the complete sweep) ===", flush=True)
+    t0 = time.time()
+    env_argv = sys.argv
+    sys.argv = ["table1", "--study", "A", "--clients", "24", "--rounds", "16",
+                "--out", "table1_slice.json"]
+    try:
+        from benchmarks import table1
+
+        table1.main()
+    finally:
+        sys.argv = env_argv
+    print(f"# table1 slice done in {time.time() - t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Msgpack-based pytree checkpointing (no orbax/flax in this environment).
+
+Format: a msgpack map ``{treedef: str, leaves: [ {dtype, shape, data} ]}``.
+Works for any pytree of jnp/np arrays + python scalars; bf16 is stored via
+a uint16 view (msgpack/numpy have no native bfloat16).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+PyTree = Any
+
+_BF16 = "bfloat16"
+
+
+def _encode_leaf(x) -> dict:
+    arr = np.asarray(jax.device_get(x))
+    if str(arr.dtype) == _BF16:
+        return {
+            "dtype": _BF16,
+            "shape": list(arr.shape),
+            "data": arr.view(np.uint16).tobytes(),
+        }
+    return {"dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def _decode_leaf(d: dict) -> np.ndarray:
+    if d["dtype"] == _BF16:
+        raw = np.frombuffer(d["data"], np.uint16).reshape(d["shape"])
+        return raw.view(jnp.bfloat16)
+    return np.frombuffer(d["data"], dtype=np.dtype(d["dtype"])).reshape(d["shape"]).copy()
+
+
+def save_pytree(path: str, tree: PyTree, metadata: dict | None = None) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {
+        "keys": _treedef_repr(tree),
+        "leaves": [_encode_leaf(x) for x in leaves],
+        "metadata": metadata or {},
+    }
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def _treedef_repr(tree: PyTree) -> str:
+    return str(jax.tree.structure(tree))
+
+
+def restore_pytree(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    like_leaves, treedef = jax.tree.flatten(like)
+    stored = payload["leaves"]
+    if len(stored) != len(like_leaves):
+        raise ValueError(
+            f"checkpoint has {len(stored)} leaves, template has {len(like_leaves)}"
+        )
+    out = []
+    for ref, d in zip(like_leaves, stored):
+        arr = _decode_leaf(d)
+        if tuple(arr.shape) != tuple(np.shape(ref)):
+            raise ValueError(f"shape mismatch: {arr.shape} vs {np.shape(ref)}")
+        out.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out)
+
+
+def load_metadata(path: str) -> dict:
+    with open(path, "rb") as f:
+        return msgpack.unpackb(f.read(), raw=False).get("metadata", {})

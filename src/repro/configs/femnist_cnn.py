@@ -1,0 +1,10 @@
+"""The paper's own workload: FEMNIST CNN (6,603,710 params) — see
+repro/models/cnn.py.  Not part of the assigned-architecture pool; used by
+the faithful reproduction path (benchmarks/table1.py)."""
+PAPER_CNN = {
+    "conv_channels": (32, 64),
+    "kernel": 5,
+    "hidden": 2048,
+    "num_classes": 62,
+    "total_params": 6_603_710,
+}

@@ -1,0 +1,22 @@
+"""gemma3-27b — dense, 5:1 local:global attention, 128k context
+[hf:google/gemma-3-1b-pt]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3-27b",
+    arch_type="dense",
+    num_layers=62,
+    d_model=5376,
+    num_heads=32,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=21_504,
+    vocab_size=262_144,
+    qk_norm=True,
+    rope_theta=10_000.0,          # local layers
+    global_rope_theta=1_000_000.0,  # global layers
+    layer_windows=(1024, 1024, 1024, 1024, 1024, None),  # 5:1
+    act="gelu",
+    tie_embeddings=True,
+    source="hf:google/gemma-3-1b-pt (Gemma 3)",
+)

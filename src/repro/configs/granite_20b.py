@@ -1,0 +1,18 @@
+"""granite-20b — dense code model, MQA (kv=1), llama-style blocks
+[arXiv:2405.04324]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-20b",
+    arch_type="dense",
+    num_layers=52,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,           # MQA
+    head_dim=128,
+    d_ff=24_576,
+    vocab_size=49_152,
+    tie_embeddings=False,
+    long_context_window=8_192,
+    source="arXiv:2405.04324 (Granite Code Models)",
+)

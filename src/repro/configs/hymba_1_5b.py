@@ -1,0 +1,27 @@
+"""hymba-1.5b — hybrid parallel attention+SSM heads [arXiv:2411.13676].
+
+Every layer runs an attention branch and a mamba2 branch in parallel on the
+same input (fused by learnable per-channel scales).  Sliding-window
+attention everywhere except first/middle/last layers (global), per paper.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b",
+    arch_type="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32_001,
+    block_type="hybrid",
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_headdim=64,
+    layer_windows=(1024,),
+    global_layer_indices=(0, 15, 31),
+    tie_embeddings=True,
+    source="arXiv:2411.13676 (Hymba)",
+)

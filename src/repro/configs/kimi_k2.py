@@ -1,0 +1,26 @@
+"""kimi-k2-1t-a32b — trillion-param MoE, 384 experts top-8
+[arXiv:2501.kimi2 per assignment table].
+
+Assignment specifies GQA kv=8 (the real model uses MLA; we follow the
+assignment's table). moe_d_ff=2048 per expert + 1 shared expert.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="kimi-k2-1t-a32b",
+    arch_type="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=2048,
+    vocab_size=163_840,
+    num_experts=384,
+    num_experts_per_tok=8,
+    moe_d_ff=2048,
+    num_shared_experts=1,
+    tie_embeddings=False,
+    long_context_window=8_192,
+    source="arXiv:2501.kimi2 (Kimi K2, paper-table)",
+)

@@ -1,0 +1,28 @@
+"""llama4-maverick-400b-a17b — MoE 128e top-1, chunked attention (iRoPE)
+[hf:meta-llama/Llama-4-Scout-17B-16E / Llama 4 release notes].
+
+The 3:1 chunked(8192):global attention pattern is llama4's native
+sub-quadratic scheme; long_500k runs on it directly (full cache + window
+masks), no serving override needed.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama4-maverick-400b-a17b",
+    arch_type="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,                  # shared-expert / dense dim per assignment
+    vocab_size=202_048,
+    rope_theta=500_000.0,
+    num_experts=128,
+    num_experts_per_tok=1,
+    moe_d_ff=8192,
+    num_shared_experts=1,
+    layer_windows=(8192, 8192, 8192, None),   # 3:1 chunked:global
+    tie_embeddings=False,
+    source="hf:meta-llama/Llama-4-Scout-17B-16E (early fusion, MoE)",
+)

@@ -1,0 +1,20 @@
+"""mamba2-2.7b — attention-free SSD (state-space duality) [arXiv:2405.21060]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-2.7b",
+    arch_type="ssm",
+    num_layers=64,
+    d_model=2560,
+    num_heads=0,              # attention-free
+    num_kv_heads=0,
+    d_ff=0,                   # mamba2 blocks have no separate MLP
+    vocab_size=50_280,
+    block_type="ssm",
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_headdim=64,
+    ssm_chunk=128,
+    tie_embeddings=True,
+    source="arXiv:2405.21060 (Mamba-2 / SSD)",
+)

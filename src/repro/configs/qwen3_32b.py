@@ -1,0 +1,19 @@
+"""qwen3-32b — dense, GQA (kv=8) with qk-norm [hf:Qwen/Qwen3-8B]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-32b",
+    arch_type="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=25_600,
+    vocab_size=151_936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=False,
+    long_context_window=8_192,
+    source="hf:Qwen/Qwen3-8B (Qwen3)",
+)

@@ -1,0 +1,29 @@
+"""whisper-small — encoder-decoder audio backbone [arXiv:2212.04356].
+
+Conv/mel frontend is a STUB per the assignment carve-out: input_specs()
+provides 1500 precomputed frame embeddings. long_500k is skipped for this
+arch (DESIGN.md §4): a 524k decode context has no semantics for a 448-token
+speech decoder.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-small",
+    arch_type="audio",
+    num_layers=12,              # decoder layers
+    encoder_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51_865,
+    cross_attention=True,
+    qkv_bias=True,
+    norm="layernorm",
+    act="gelu",
+    frontend="audio",
+    num_frontend_tokens=1500,
+    tie_embeddings=True,
+    source="arXiv:2212.04356 (Whisper)",
+)

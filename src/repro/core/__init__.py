@@ -1,0 +1,37 @@
+"""Core paper contribution: device-aware multi-criteria FL aggregation."""
+from repro.core.aggregate import (
+    AggregationConfig,
+    aggregate_models,
+    aggregate_round,
+    compute_scores,
+    compute_weights,
+)
+from repro.core.adjust import AdjustResult, adjust_round, adjust_round_vectorized
+from repro.core.criteria import (
+    ClientContext,
+    available_criteria,
+    get_criterion,
+    measure_criteria,
+    normalize_criteria,
+    register_criterion,
+    resolve,
+)
+from repro.core.operators import (
+    all_permutations,
+    choquet_score,
+    owa_score,
+    prioritized_score,
+    prioritized_weights,
+    scores_to_weights,
+    weighted_average_score,
+)
+
+__all__ = [
+    "AggregationConfig", "aggregate_models", "aggregate_round",
+    "compute_scores", "compute_weights",
+    "AdjustResult", "adjust_round", "adjust_round_vectorized",
+    "ClientContext", "available_criteria", "get_criterion",
+    "measure_criteria", "normalize_criteria", "register_criterion", "resolve",
+    "all_permutations", "choquet_score", "owa_score", "prioritized_score",
+    "prioritized_weights", "scores_to_weights", "weighted_average_score",
+]

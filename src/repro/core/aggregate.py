@@ -1,0 +1,107 @@
+"""Server-side aggregation: criteria → weights → weighted model average.
+
+This is the heart of the paper's protocol (Eqs. 2–4): the server receives
+per-client criteria evaluations and local models (or updates), computes one
+score per client with an aggregation *operator*, normalizes scores into
+weights ``p^k`` and forms ``w_G = sum_k p^k w^k``.
+
+Two execution paths for the weighted sum:
+
+* pure-jnp :func:`repro.utils.pytree.tree_weighted_sum` (always available)
+* the Pallas ``weighted_agg`` kernel (TPU; interpret-mode on CPU) for the
+  flattened-parameter hot path — selected with ``use_kernel=True``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import operators
+from repro.core.operators import Permutation
+from repro.utils.pytree import PyTree, tree_weighted_sum
+
+
+@dataclass(frozen=True)
+class AggregationConfig:
+    """Configuration of the multi-criteria aggregation step."""
+
+    criteria: Tuple[str, ...] = ("Ds", "Ld", "Md")
+    operator: str = "prioritized"
+    # operator parameters; `priority` indexes into `criteria`
+    priority: Permutation = (0, 1, 2)
+    importance: Optional[Tuple[float, ...]] = None   # weighted_average
+    owa_alpha: float = 2.0                           # owa quantifier
+    choquet_lambda: float = -0.5                     # choquet capacity
+    choquet_singletons: Optional[Tuple[float, ...]] = None
+
+    def num_criteria(self) -> int:
+        return len(self.criteria)
+
+
+def compute_scores(
+    c: jax.Array, cfg: AggregationConfig, priority: Optional[Permutation] = None
+) -> jax.Array:
+    """Criteria matrix ``[K, m]`` → raw scores ``[K]`` under ``cfg``."""
+    m = c.shape[-1]
+    if cfg.operator == "prioritized":
+        return operators.prioritized_score(c, priority or cfg.priority)
+    if cfg.operator == "weighted_average":
+        imp = cfg.importance or (1.0,) * m
+        return operators.weighted_average_score(c, jnp.asarray(imp))
+    if cfg.operator == "owa":
+        w = operators.owa_quantifier_weights(m, cfg.owa_alpha)
+        return operators.owa_score(c, w)
+    if cfg.operator == "choquet":
+        singles = cfg.choquet_singletons or (1.0 / m,) * m
+        mu = operators.lambda_fuzzy_measure(singles, cfg.choquet_lambda)
+        return operators.choquet_score(c, mu)
+    raise KeyError(f"unknown operator {cfg.operator!r}")
+
+
+def compute_weights(
+    c: jax.Array,
+    cfg: AggregationConfig,
+    priority: Optional[Permutation] = None,
+    mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Criteria → normalized aggregation weights ``p[K]`` (Eq. 3).
+
+    ``mask`` zeroes out non-participating clients before normalization.
+    """
+    s = compute_scores(c, cfg, priority)
+    if mask is not None:
+        s = s * jnp.asarray(mask, s.dtype)
+    return operators.scores_to_weights(s)
+
+
+def aggregate_models(
+    stacked: PyTree,
+    weights: jax.Array,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> PyTree:
+    """``w_G = sum_k p_k w_k`` over a leading client axis.
+
+    ``stacked`` has leaves ``[K, ...]``; ``weights`` is ``[K]``.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        return kops.tree_weighted_agg(stacked, weights, interpret=interpret)
+    return tree_weighted_sum(stacked, weights)
+
+
+def aggregate_round(
+    c: jax.Array,
+    stacked_models: PyTree,
+    cfg: AggregationConfig,
+    priority: Optional[Permutation] = None,
+    mask: Optional[jax.Array] = None,
+    use_kernel: bool = False,
+) -> Tuple[PyTree, jax.Array]:
+    """One full server aggregation: returns ``(w_G, p)``."""
+    p = compute_weights(c, cfg, priority, mask)
+    return aggregate_models(stacked_models, p, use_kernel=use_kernel), p

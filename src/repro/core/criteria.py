@@ -1,0 +1,164 @@
+"""Client criteria (paper §3, "Identified local criteria") + registry.
+
+Each criterion is a pure function producing one raw scalar per client; the
+server then normalizes raw values across the round's participants so that
+``sum_k c_i^k = 1`` (paper's interval-scale normalization).  The paper's
+three criteria:
+
+* ``dataset_size`` (Ds)     — |D_k| share (the FedAvg baseline criterion)
+* ``label_diversity`` (Ld)  — number of distinct labels share
+* ``model_divergence`` (Md) — phi_k / sum phi, phi = 1/sqrt(||w_G - w_k||_2 + 1)
+
+Extensions beyond the paper (same contract, showing the registry is open —
+the paper explicitly frames the criteria set as domain-expert-extensible):
+
+* ``load_balance`` (Lb)     — MoE expert-utilization entropy share
+* ``compute_capability``    — declared device FLOP/s share (device-awareness)
+* ``staleness``             — inverse update-staleness share (async rounds)
+
+Raw values are normalized by :func:`normalize_criteria`; a participation
+mask supports rounds where only a subset of clients report.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import PyTree, tree_sq_norm
+
+# Raw criterion signature: client-local information → scalar (>= 0).
+#   ctx fields are optional; criteria use what they need.
+
+
+@dataclass
+class ClientContext:
+    """Everything a criterion may inspect for one client.
+
+    All fields are per-client; any may be ``None`` when not applicable.
+    """
+
+    num_examples: Optional[jax.Array] = None     # |D_k| (scalar)
+    label_counts: Optional[jax.Array] = None     # [num_classes] histogram
+    update: Optional[PyTree] = None              # w_k - w_G (or -lr*g_k)
+    global_params: Optional[PyTree] = None       # w_G (rarely needed)
+    expert_counts: Optional[jax.Array] = None    # [num_experts] routing histogram
+    flops_per_sec: Optional[jax.Array] = None    # declared capability
+    staleness: Optional[jax.Array] = None        # rounds since last sync
+
+
+def dataset_size(ctx: ClientContext) -> jax.Array:
+    """Ds — raw |D_k| (FedAvg's criterion)."""
+    return jnp.asarray(ctx.num_examples, jnp.float32)
+
+
+def label_diversity(ctx: ClientContext) -> jax.Array:
+    """Ld — number of distinct labels present in the local dataset."""
+    counts = jnp.asarray(ctx.label_counts)
+    return jnp.sum((counts > 0).astype(jnp.float32))
+
+
+def model_divergence(ctx: ClientContext) -> jax.Array:
+    """Md — phi_k = 1 / sqrt(||w_G - w_k||_2 + 1); rewards small divergence."""
+    nrm = jnp.sqrt(tree_sq_norm(ctx.update))
+    return 1.0 / jnp.sqrt(nrm + 1.0)
+
+
+def load_balance(ctx: ClientContext) -> jax.Array:
+    """Lb — entropy of the client's expert-utilization histogram (MoE).
+
+    A client whose tokens spread evenly over experts contributes gradients
+    that keep the router balanced; entropy is normalized to [0, 1].
+    """
+    counts = jnp.asarray(ctx.expert_counts, jnp.float32)
+    p = counts / jnp.maximum(jnp.sum(counts), 1.0)
+    ent = -jnp.sum(jnp.where(p > 0, p * jnp.log(p), 0.0))
+    return ent / jnp.log(jnp.asarray(counts.shape[0], jnp.float32))
+
+
+def compute_capability(ctx: ClientContext) -> jax.Array:
+    """Raw declared FLOP/s — favors fast devices finishing full local work."""
+    return jnp.asarray(ctx.flops_per_sec, jnp.float32)
+
+
+def staleness(ctx: ClientContext) -> jax.Array:
+    """1 / (1 + rounds-since-sync) — discounts stale async updates."""
+    return 1.0 / (1.0 + jnp.asarray(ctx.staleness, jnp.float32))
+
+
+CriterionFn = Callable[[ClientContext], jax.Array]
+
+_REGISTRY: Dict[str, CriterionFn] = {}
+
+
+def register_criterion(name: str, fn: CriterionFn) -> None:
+    if name in _REGISTRY:
+        raise ValueError(f"criterion {name!r} already registered")
+    _REGISTRY[name] = fn
+
+
+def get_criterion(name: str) -> CriterionFn:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown criterion {name!r}; available: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def available_criteria() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+for _name, _fn in [
+    ("dataset_size", dataset_size),
+    ("label_diversity", label_diversity),
+    ("model_divergence", model_divergence),
+    ("load_balance", load_balance),
+    ("compute_capability", compute_capability),
+    ("staleness", staleness),
+]:
+    register_criterion(_name, _fn)
+
+# Short aliases used throughout the paper's tables.
+ALIASES = {"Ds": "dataset_size", "Ld": "label_diversity", "Md": "model_divergence",
+           "Lb": "load_balance"}
+
+
+def resolve(name: str) -> str:
+    return ALIASES.get(name, name)
+
+
+def normalize_criteria(
+    raw: jax.Array, mask: Optional[jax.Array] = None, eps: float = 1e-12
+) -> jax.Array:
+    """Normalize raw per-client values so ``sum_k c^k = 1`` over participants.
+
+    ``raw`` is ``[K]`` (or ``[K, m]`` — normalized per column).  ``mask`` is
+    an optional ``[K]`` 0/1 participation mask; non-participants get 0.
+    Degenerate all-zero columns fall back to uniform over participants.
+    """
+    raw = jnp.asarray(raw, jnp.float32)
+    squeeze = raw.ndim == 1
+    if squeeze:
+        raw = raw[:, None]
+    if mask is None:
+        mask = jnp.ones(raw.shape[0], jnp.float32)
+    mask = jnp.asarray(mask, jnp.float32)
+    masked = raw * mask[:, None]
+    z = jnp.sum(masked, axis=0, keepdims=True)
+    n_part = jnp.maximum(jnp.sum(mask), 1.0)
+    uniform = mask[:, None] / n_part
+    out = jnp.where(z > eps, masked / jnp.maximum(z, eps), uniform)
+    return out[:, 0] if squeeze else out
+
+
+def measure_criteria(
+    names: tuple, ctx: ClientContext
+) -> jax.Array:
+    """Evaluate raw criteria for ONE client; returns ``[m]``.
+
+    Vmap this over a batched :class:`ClientContext` to get ``[K, m]``,
+    then :func:`normalize_criteria` across clients.
+    """
+    vals = [get_criterion(resolve(n))(ctx) for n in names]
+    return jnp.stack([jnp.asarray(v, jnp.float32) for v in vals])

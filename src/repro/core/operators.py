@@ -1,0 +1,196 @@
+"""Multi-criteria aggregation operators (paper §2.2).
+
+The paper evaluates several IR aggregation operators over per-client
+criteria vectors and reports the *prioritized* operator of
+da Costa Pereira et al. [6] (its Eq. 4) as the best performer.  We implement
+the full suite the paper mentions so studies can compare them:
+
+* ``prioritized``     — Eq. 4, priority-ordered multiplicative attenuation
+* ``weighted_average``— classic weighted mean with fixed importance weights
+* ``owa``             — ordered weighted averaging (Yager); weights apply to
+                        the *sorted* criteria values, enabling and/or-like
+                        quantifiers
+* ``choquet``         — discrete Choquet integral w.r.t. a fuzzy capacity,
+                        modelling positive/negative criteria interactions
+
+Every operator maps a criteria matrix ``c[K, m]`` (K clients, m criteria,
+entries in [0, 1]) to a score vector ``s[K]``; :func:`scores_to_weights`
+normalizes scores into aggregation weights ``p[K]`` with ``sum(p) == 1``
+(paper Eq. 3).
+
+All operators are pure jnp and jit/vmap/grad-safe; the permutation argument
+is a *static* tuple so the online-adjustment search (Algorithm 1) can lower
+one XLA computation per candidate priority order.
+"""
+from __future__ import annotations
+
+import itertools
+from functools import partial
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Permutation = Tuple[int, ...]
+
+
+def all_permutations(m: int) -> Tuple[Permutation, ...]:
+    """All priority orders over ``m`` criteria (m! of them)."""
+    return tuple(itertools.permutations(range(m)))
+
+
+# ---------------------------------------------------------------------------
+# Prioritized operator — paper Eq. 4
+# ---------------------------------------------------------------------------
+
+def prioritized_score(c: jax.Array, priority: Permutation) -> jax.Array:
+    """Prioritized multi-criteria score s^k (paper Eq. 4).
+
+    ``c`` is ``[K, m]`` (or ``[m]``), ``priority`` lists criteria indices
+    from the MOST important to the least important.  With
+    ``lambda_1 = 1`` and ``lambda_i = lambda_{i-1} * c_{(i-1)}``::
+
+        s = sum_i lambda_i * c_(i)
+
+    so an unfulfilled high-priority criterion attenuates everything below it.
+    """
+    c = jnp.asarray(c)
+    squeeze = c.ndim == 1
+    if squeeze:
+        c = c[None, :]
+    perm = jnp.asarray(priority, dtype=jnp.int32)
+    ordered = c[:, perm]  # [K, m], most→least important
+    # lambda_i = prod_{j<i} c_(j)  (exclusive cumulative product)
+    ones = jnp.ones_like(ordered[:, :1])
+    lam = jnp.concatenate([ones, jnp.cumprod(ordered[:, :-1], axis=1)], axis=1)
+    s = jnp.sum(lam * ordered, axis=1)
+    return s[0] if squeeze else s
+
+
+# ---------------------------------------------------------------------------
+# Weighted average
+# ---------------------------------------------------------------------------
+
+def weighted_average_score(c: jax.Array, importance: jax.Array) -> jax.Array:
+    """Fixed-importance weighted mean: ``s = c @ w / sum(w)``."""
+    c = jnp.asarray(c)
+    w = jnp.asarray(importance, dtype=c.dtype)
+    return c @ (w / jnp.sum(w))
+
+
+# ---------------------------------------------------------------------------
+# OWA — ordered weighted averaging (Yager 1988)
+# ---------------------------------------------------------------------------
+
+def owa_score(c: jax.Array, owa_weights: jax.Array) -> jax.Array:
+    """OWA: weights are applied to criteria sorted in descending order.
+
+    ``owa_weights = [1, 0, ..]`` is OR (max); ``[.., 0, 1]`` is AND (min);
+    uniform weights recover the plain mean.
+    """
+    c = jnp.asarray(c)
+    squeeze = c.ndim == 1
+    if squeeze:
+        c = c[None, :]
+    w = jnp.asarray(owa_weights, dtype=c.dtype)
+    w = w / jnp.sum(w)
+    c_sorted = jnp.sort(c, axis=1)[:, ::-1]  # descending
+    s = c_sorted @ w
+    return s[0] if squeeze else s
+
+
+def owa_quantifier_weights(m: int, alpha: float) -> jax.Array:
+    """RIM-quantifier OWA weights ``w_i = Q(i/m) - Q((i-1)/m)``, Q(x)=x^alpha.
+
+    ``alpha < 1`` leans OR-like (optimistic), ``alpha > 1`` AND-like.
+    """
+    xs = jnp.arange(m + 1, dtype=jnp.float32) / m
+    q = xs**alpha
+    return q[1:] - q[:-1]
+
+
+# ---------------------------------------------------------------------------
+# Choquet integral w.r.t. a fuzzy measure
+# ---------------------------------------------------------------------------
+
+def lambda_fuzzy_measure(singletons: Sequence[float], lam: float) -> jax.Array:
+    """Dense Sugeno lambda-measure over all 2^m subsets.
+
+    ``mu(A ∪ B) = mu(A) + mu(B) + lam * mu(A) * mu(B)`` for disjoint A, B.
+    Returns ``mu[2**m]`` indexed by subset bitmask.  Small m only (m <= 8).
+    """
+    m = len(singletons)
+    mu = [0.0] * (1 << m)
+    for mask in range(1, 1 << m):
+        lo = mask & (mask - 1)  # mask without its lowest set bit
+        bit = mask ^ lo
+        i = bit.bit_length() - 1
+        g = float(singletons[i])
+        mu[mask] = mu[lo] + g + lam * mu[lo] * g
+    full = mu[(1 << m) - 1]
+    arr = jnp.asarray(mu, dtype=jnp.float32)
+    return arr / jnp.maximum(full, 1e-12)
+
+
+def choquet_score(c: jax.Array, measure: jax.Array) -> jax.Array:
+    """Discrete Choquet integral of ``c[K, m]`` w.r.t. subset measure ``mu``.
+
+    ``C(c) = sum_i (c_(i) - c_(i-1)) * mu(A_i)`` where ``c_(1) <= ... <=
+    c_(m)`` ascending and ``A_i`` is the set of criteria with value >=
+    ``c_(i)``.  ``measure`` is a dense ``[2**m]`` table by bitmask.
+    """
+    c = jnp.asarray(c)
+    squeeze = c.ndim == 1
+    if squeeze:
+        c = c[None, :]
+    K, m = c.shape
+    order = jnp.argsort(c, axis=1)  # ascending value order
+    c_sorted = jnp.take_along_axis(c, order, axis=1)
+    prev = jnp.concatenate([jnp.zeros((K, 1), c.dtype), c_sorted[:, :-1]], axis=1)
+    diffs = c_sorted - prev  # [K, m]
+
+    # A_i = criteria at sort positions i..m-1 → bitmask via suffix sums.
+    bits = jnp.left_shift(jnp.ones((), jnp.int32), order.astype(jnp.int32))
+    # suffix cumulative OR == suffix sum here because bits are distinct powers
+    suffix = jnp.cumsum(bits[:, ::-1], axis=1)[:, ::-1]  # [K, m] masks
+    mu_vals = jnp.take(jnp.asarray(measure), suffix)
+    s = jnp.sum(diffs * mu_vals, axis=1)
+    return s[0] if squeeze else s
+
+
+# ---------------------------------------------------------------------------
+# Scores → aggregation weights (paper Eq. 3)
+# ---------------------------------------------------------------------------
+
+def scores_to_weights(s: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """``p^k = s^k / Z`` with ``Z = sum_k s^k`` (paper Eq. 3).
+
+    Falls back to uniform weights if every score is ~0 (degenerate round),
+    so aggregation never divides by zero or produces NaNs.
+    """
+    s = jnp.asarray(s, dtype=jnp.float32)
+    z = jnp.sum(s)
+    uniform = jnp.full_like(s, 1.0 / s.shape[0])
+    return jnp.where(z > eps, s / jnp.maximum(z, eps), uniform)
+
+
+_OPERATORS = {
+    "prioritized": prioritized_score,
+    "weighted_average": weighted_average_score,
+    "owa": owa_score,
+    "choquet": choquet_score,
+}
+
+
+def get_operator(name: str):
+    if name not in _OPERATORS:
+        raise KeyError(
+            f"unknown aggregation operator {name!r}; available: {sorted(_OPERATORS)}"
+        )
+    return _OPERATORS[name]
+
+
+@partial(jax.jit, static_argnames=("priority",))
+def prioritized_weights(c: jax.Array, priority: Permutation) -> jax.Array:
+    """Convenience: criteria matrix → normalized aggregation weights."""
+    return scores_to_weights(prioritized_score(c, priority))

@@ -1,0 +1,7 @@
+from repro.data.synthetic import (
+    FederatedDataset,
+    make_lm_federated,
+    make_synth_femnist,
+)
+
+__all__ = ["FederatedDataset", "make_lm_federated", "make_synth_femnist"]

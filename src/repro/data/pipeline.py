@@ -1,0 +1,64 @@
+"""Batching / sampling utilities for federated rounds.
+
+The simulation engine consumes *dense padded* client shards (see
+``synthetic.FederatedDataset``) and needs, per round:
+
+* a client subset (``sampler.sample_clients``),
+* per-client minibatch streams for E local epochs of batch size B.
+
+Everything is index-based and jit-friendly: we precompute permutation
+indices with numpy (host side, per round) and gather on device.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import numpy as np
+
+
+def local_batch_indices(
+    count: int, batch_size: int, epochs: int, rng: np.random.Generator,
+    pad_to: int,
+) -> np.ndarray:
+    """Indices ``[num_steps, batch_size]`` covering ``epochs`` shuffled passes.
+
+    Local datasets are padded to ``pad_to``; indices always point at valid
+    rows (< count), resampling with replacement when ``count < batch_size``.
+    """
+    steps_per_epoch = max(1, count // batch_size)
+    out = []
+    for _ in range(epochs):
+        perm = rng.permutation(count)
+        if count < batch_size:
+            perm = rng.choice(count, size=batch_size, replace=True)
+        for s in range(steps_per_epoch):
+            sl = perm[s * batch_size : (s + 1) * batch_size]
+            if len(sl) < batch_size:
+                sl = np.concatenate([sl, rng.choice(count, batch_size - len(sl))])
+            out.append(sl)
+    return np.asarray(out, np.int32)
+
+
+def round_batch_indices(
+    counts: np.ndarray, selected: np.ndarray, batch_size: int, epochs: int,
+    rng: np.random.Generator, fixed_steps: int | None = None,
+) -> np.ndarray:
+    """Stacked per-client index plans ``[num_sel, num_steps, batch]``.
+
+    All clients run the same number of local steps so the per-client loop is
+    a fixed-shape ``lax.scan``; smaller clients wrap around (extra passes),
+    which matches LEAF's implementation detail of cycling small datasets.
+    Passing ``fixed_steps`` (e.g. derived from the *global* max client size)
+    keeps the plan shape constant across rounds so the jitted training
+    function compiles exactly once.
+    """
+    steps = fixed_steps if fixed_steps is not None else max(
+        1, max(int(counts[k]) // batch_size for k in selected)
+    ) * epochs
+    plans = np.zeros((len(selected), steps, batch_size), np.int32)
+    for i, k in enumerate(selected):
+        idx = local_batch_indices(int(counts[k]), batch_size, epochs, rng,
+                                  pad_to=0)
+        reps = int(np.ceil(steps / idx.shape[0]))
+        plans[i] = np.tile(idx, (reps, 1))[:steps]
+    return plans

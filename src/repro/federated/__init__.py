@@ -1,0 +1,4 @@
+from repro.federated.sampler import sample_clients
+from repro.federated.simulation import FederatedSimulation, FedSimConfig
+
+__all__ = ["FederatedSimulation", "FedSimConfig", "sample_clients"]

@@ -1,0 +1,23 @@
+"""Client selection for each round of communication.
+
+The paper uses uniform sampling of a fixed fraction (10%).  We also ship a
+capability-aware sampler (devices declare FLOP/s; selection probability is
+proportional) as a beyond-paper extension consistent with its
+device-awareness theme.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def sample_clients(
+    num_clients: int, fraction: float, rng: np.random.Generator,
+    weights: np.ndarray | None = None,
+) -> np.ndarray:
+    """Sample ``ceil(fraction * num_clients)`` distinct clients."""
+    n = max(1, int(round(fraction * num_clients)))
+    p = None
+    if weights is not None:
+        w = np.asarray(weights, np.float64)
+        p = w / w.sum()
+    return np.sort(rng.choice(num_clients, size=n, replace=False, p=p))

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the technique's hot spots + jnp oracles.
+
+* ``weighted_agg``   — fused multi-client weighted parameter aggregation
+* ``divergence``     — fused per-client L2 divergence (criterion Md)
+* ``flash_attention``— blockwise attention w/ GQA + sliding window
+* ``ref``            — pure-jnp oracles (+ attention_chunked, the XLA-level
+                       online-softmax attention used by the serving path)
+* ``ops``            — jit'd public wrappers / pytree adapters
+
+Kernels are TPU-targeted (pl.pallas_call + BlockSpec VMEM tiling) and
+validated on CPU with ``interpret=True`` against the oracles.
+"""

@@ -1,0 +1,153 @@
+"""Pallas TPU kernel: blockwise (flash) attention with GQA + sliding window.
+
+TPU-native mapping of the attention hot spot used by the serving path
+(prefill) of the model zoo:
+
+* grid ``(B, Hq, nQ, nKV)`` with the KV dimension innermost — the running
+  softmax statistics (m, l) and the output accumulator live in VMEM scratch
+  and are carried across KV steps (TPU grids are sequential).
+* Q/K/V tiles are ``[bq, D]`` / ``[bk, D]`` VMEM blocks; D rides the lane
+  dimension (128-aligned), bq/bk the sublane dimension — both matmuls
+  (logits and PV) hit the MXU with well-shaped operands.
+* GQA is expressed in the BlockSpec index maps: the KV block index maps
+  ``h → h // group`` so no repeated KV is ever materialized.
+* Sliding-window and causal masks are applied with *finite* mask values and
+  post-exp zeroing (robust to fully-masked rows); KV blocks that cannot
+  intersect the mask are skipped entirely with ``pl.when``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, window: Optional[int],
+                 q_offset: int, bq: int, bk: int, n_kv: int):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qi = pl.program_id(2)
+    q_start = q_offset + qi * bq           # absolute position of first query
+    k_start = ki * bk
+
+    # --- can this KV block contribute at all? --------------------------
+    visible = jnp.bool_(True)
+    if causal:
+        visible &= k_start <= q_start + bq - 1
+    if window is not None:
+        # newest key needed by the oldest query in the tile
+        visible &= (k_start + bk - 1) > (q_start - window)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)              # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)              # [bk, D]
+        logits = q @ k.T                                 # [bq, bk] (MXU)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        logits = jnp.where(mask, logits, _NEG)
+
+        m_old = m_scr[...]                               # [bq, 1]
+        m_new = jnp.maximum(m_old, jnp.max(logits, axis=1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        p = jnp.where(mask, p, 0.0)                      # fully-masked-row safe
+        alpha = jnp.exp(m_old - m_new)                   # [bq, 1]
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = alpha * acc_scr[...] + p @ v      # [bq, D] (MXU)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "block_q", "block_k",
+                     "interpret"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blockwise attention. ``q``: [B, Hq, Sq, D]; ``k/v``: [B, Hkv, Skv, D].
+
+    Matches :func:`repro.kernels.ref.attention_ref`.  ``window`` is the
+    sliding-window size in absolute positions (None = unbounded).
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0, "GQA requires Hq % Hkv == 0"
+    group = Hq // Hkv
+    scale = float(1.0 / (D ** 0.5))
+
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    q_pad, k_pad = (-Sq) % bq, (-Skv) % bk
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, q_pad), (0, 0)))
+    if k_pad:
+        # padded keys are masked out by position (>= Skv never visible for
+        # causal; for non-causal we mask explicitly below via window trick)
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, k_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, k_pad), (0, 0)))
+    Sq_p, Skv_p = Sq + q_pad, Skv + k_pad
+    n_kv = Skv_p // bk
+
+    if not causal and k_pad:
+        raise ValueError(
+            "non-causal attention requires Skv divisible by block_k "
+            f"(got Skv={Skv}, block_k={bk})"
+        )
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, bq=bq, bk=bk, n_kv=n_kv,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, Sq_p // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq_p, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]

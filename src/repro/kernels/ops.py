@@ -1,0 +1,73 @@
+"""Jit'd public wrappers over the Pallas kernels (+ pytree adapters).
+
+``interpret=True`` everywhere in this container (CPU validation mode); on a
+real TPU the launch scripts pass ``interpret=False``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.divergence import divergence_sq
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.weighted_agg import weighted_agg
+from repro.utils.pytree import PyTree
+
+
+def tree_weighted_agg(stacked: PyTree, weights: jax.Array,
+                      interpret: bool = True) -> PyTree:
+    """Kernel-backed ``w_G = Σ_k p_k w_k`` over a stacked-client pytree.
+
+    Each leaf ``[K, ...]`` is viewed as ``[K, N]`` and aggregated in one
+    fused pass; tiny leaves (< 1 lane row) fall back to jnp.
+    """
+    def _one(leaf: jax.Array) -> jax.Array:
+        K = leaf.shape[0]
+        n = int(jnp.prod(jnp.asarray(leaf.shape[1:]))) if leaf.ndim > 1 else 1
+        flat = leaf.reshape(K, n)
+        if n < 128:
+            return ref.weighted_agg_ref(flat, weights).reshape(leaf.shape[1:])
+        out = weighted_agg(flat, weights, interpret=interpret)
+        return out.reshape(leaf.shape[1:])
+
+    return jax.tree.map(_one, stacked)
+
+
+def tree_divergence_sq(stacked: PyTree, global_params: PyTree,
+                       interpret: bool = True) -> jax.Array:
+    """Per-client squared L2 distance ``[K]`` summed over every leaf."""
+    leaves = jax.tree.leaves(stacked)
+    g_leaves = jax.tree.leaves(global_params)
+    K = leaves[0].shape[0]
+    total = jnp.zeros((K,), jnp.float32)
+    for x, g in zip(leaves, g_leaves):
+        n = int(x.size) // K
+        flat = x.reshape(K, n)
+        gflat = g.reshape(n)
+        if n < 128:
+            total = total + ref.divergence_ref(flat, gflat)
+        else:
+            total = total + divergence_sq(flat, gflat, interpret=interpret)
+    return total
+
+
+def attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    causal: bool = True, window: Optional[int] = None, q_offset: int = 0,
+    use_pallas: bool = False, interpret: bool = True,
+    block_q: int = 128, block_k: int = 128,
+) -> jax.Array:
+    """Dispatch between the Pallas flash kernel and the jnp reference.
+
+    The model zoo calls this everywhere; the dry-run path (host backend)
+    uses ``use_pallas=False`` since Mosaic kernels only lower on TPU.
+    """
+    if use_pallas:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+    return ref.attention_ref(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset)

@@ -1,0 +1,137 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each kernel in this package must match its oracle here to float tolerance
+across a sweep of shapes/dtypes (see ``tests/test_kernels_*.py``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_agg_ref(stacked: jax.Array, weights: jax.Array) -> jax.Array:
+    """``out[n] = sum_k w[k] * x[k, n]`` accumulated in f32.
+
+    ``stacked``: [K, N] (any float dtype); ``weights``: [K] f32.
+    Returns the same dtype as ``stacked``.
+    """
+    acc = jnp.sum(
+        weights.astype(jnp.float32)[:, None] * stacked.astype(jnp.float32),
+        axis=0,
+    )
+    return acc.astype(stacked.dtype)
+
+
+def divergence_ref(stacked: jax.Array, global_vec: jax.Array) -> jax.Array:
+    """Per-client squared L2 distance to the global vector, f32.
+
+    ``stacked``: [K, N]; ``global_vec``: [N] → out [K] f32.
+    """
+    d = global_vec.astype(jnp.float32)[None, :] - stacked.astype(jnp.float32)
+    return jnp.sum(d * d, axis=1)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Reference (G)QA attention with optional causal/sliding-window mask.
+
+    ``q``: [B, Hq, Sq, D]; ``k``/``v``: [B, Hkv, Skv, D] with Hq % Hkv == 0.
+    ``q_offset`` is the absolute position of q[:, :, 0] (decode: cache_len).
+    ``window``: if set, query at absolute position i attends to keys in
+    ``(i - window, i]`` — i.e. a sliding window of size ``window``.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = scale if scale is not None else 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) * s
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows (can happen with tiny windows) -> zeros, not NaN
+    probs = jnp.where(jnp.any(mask, -1)[None, None, :, None], probs, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window=None,
+    q_offset=0,
+    block: int = 1024,
+    k_valid=None,
+    unroll: bool = False,
+) -> jax.Array:
+    """Flash-style attention in pure XLA: online softmax over KV blocks.
+
+    Never materializes the [Sq, Skv] score matrix — peak intermediate is
+    [B, Hq, Sq, block].  This is the "XLA-level flash" used by the serving
+    prefill path (the Pallas kernel is the TPU-kernel-level equivalent).
+    ``window``/``q_offset`` may be traced scalars; ``k_valid`` optionally
+    masks cache positions ≥ its value (prefill against a larger cache).
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    pad = (-Skv) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nb = (Skv + pad) // block
+    kb = jnp.moveaxis(k.reshape(B, Hkv, nb, block, D), 2, 0)
+    vb = jnp.moveaxis(v.reshape(B, Hkv, nb, block, D), 2, 0)
+
+    q32 = q.reshape(B, Hkv, group, Sq, D).astype(jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, start = inp
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", q32, kc.astype(jnp.float32))
+        k_pos = start + jnp.arange(block)
+        mask = k_pos[None, :] < (Skv if k_valid is None else k_valid)
+        if causal:
+            mask = mask & (q_pos[:, None] >= k_pos[None, :])
+        if window is not None:
+            mask = mask & ((q_pos[:, None] - k_pos[None, :]) < window)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc = alpha * acc + jnp.einsum("bhgqk,bhkd->bhgqd", p,
+                                       vc.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, group, Sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, group, Sq, 1), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, group, Sq, D), jnp.float32)
+    starts = jnp.arange(nb) * block
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, starts),
+                                  unroll=nb if unroll else 1)
+    out = acc / jnp.where(l > 0, l, 1.0)
+    return out.reshape(B, Hq, Sq, D).astype(q.dtype)

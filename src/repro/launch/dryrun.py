@@ -1,0 +1,312 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+MUST be run as a module entry point (``python -m repro.launch.dryrun``) so
+the XLA_FLAGS override above executes before jax initializes devices —
+tests and benchmarks never import this module.
+
+For each combination this produces a JSON record with:
+  * compiled memory analysis (bytes/device: args, outputs, temps, code)
+  * cost analysis (per-device HLO FLOPs + bytes accessed)
+  * collective traffic by opcode (parsed from optimized HLO)
+  * the roofline terms (§Roofline, TPU v5e constants)
+used by ``repro.launch.roofline`` and EXPERIMENTS.md.
+
+Loop-cost correction (``--extrapolate``): XLA's cost_analysis counts a
+while-loop body ONCE, so scan-over-layers programs under-report FLOPs /
+bytes / collective traffic by ~num_layers×.  We lower a 2-layer clone of
+the model twice (layer_unroll=1 and =2); the difference isolates the exact
+per-layer body cost, which is then extrapolated:
+``total = f(L, u=1) + (L - 1) · (f(2, u=2) - f(2, u=1))``.
+(Verified exact on divisible unrolls; the chunked-CE scan is fully
+unrolled during analysis so it is counted exactly; the SSD inter-chunk
+recurrence remains counted once per layer — negligible, it is a small
+state einsum vs. the intra-chunk matmuls.)
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.registry import ARCHS, get_arch
+from repro.configs.shapes import SHAPES
+from repro.federated.distributed import make_federated_train_step
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import roofline_terms
+from repro.models import sharding as msharding
+from repro.models.registry import bundle as make_bundle
+from repro.utils.hlo import parse_collective_bytes
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def build_lowerable(arch: str, shape_name: str, mesh, fsdp: bool = False,
+                    priority=(2, 0, 1), fedavg: bool = False,
+                    cfg_overrides: dict | None = None,
+                    agg_mode: str = "allreduce",
+                    expert_data: bool = True):
+    """Returns (fn, example_args, skip_reason)."""
+    cfg = get_arch(arch)
+    if cfg_overrides:
+        cfg = cfg.with_overrides(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    reason = S.skip_reason(cfg, shape)
+    if reason:
+        return None, None, reason
+    mdl = make_bundle(cfg)
+
+    if shape.kind == "train":
+        step = make_federated_train_step(
+            mdl, mesh, priority=priority, fedavg_baseline=fedavg,
+            agg_mode=agg_mode,
+        )
+        params = S.params_struct(cfg, mesh, fsdp=fsdp)
+        batch = S.train_batch(cfg, shape, mesh)
+        return step, (params, batch), None
+
+    layout = S.decode_cache_layout(cfg, shape)
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch, cache):
+            return mdl.prefill(params, batch, cache, layout=layout)
+
+        params = S.params_struct(cfg, mesh, fsdp=fsdp, expert_data=expert_data)
+        batch = S.prefill_batch(cfg, shape, mesh)
+        cache = S.cache_struct(cfg, shape, mesh, layout=layout)
+        return prefill_fn, (params, batch, cache), None
+
+    # decode
+    def decode_fn(params, token, index, cache):
+        return mdl.decode_step(params, token, index, cache, layout=layout)
+
+    params = S.params_struct(cfg, mesh, fsdp=fsdp, expert_data=expert_data)
+    token, index, cache = S.decode_inputs(cfg, shape, mesh)
+    return decode_fn, (params, token, index, cache), None
+
+
+def _lower_and_measure(arch, shape_name, mesh, fsdp, fedavg, cfg_overrides,
+                       agg_mode="allreduce", expert_data=True):
+    """One lower+compile → (memory, cost, collectives) dicts."""
+    fn, args, reason = build_lowerable(
+        arch, shape_name, mesh, fsdp=fsdp, fedavg=fedavg,
+        cfg_overrides=cfg_overrides, agg_mode=agg_mode,
+        expert_data=expert_data,
+    )
+    if reason:
+        return None, reason
+    lowered = jax.jit(fn).lower(*args)
+    compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    coll = parse_collective_bytes(compiled.as_text())
+    return {
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "generated_code_bytes": ma.generated_code_size_in_bytes,
+            "total_bytes_per_device": (
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes + ma.generated_code_size_in_bytes
+            ),
+        },
+        "cost": {
+            "flops_per_device": ca.get("flops", 0.0),
+            "bytes_per_device": ca.get("bytes accessed", 0.0),
+        },
+        "collectives": {
+            "bytes_by_op": dict(coll.bytes_by_op),
+            "count_by_op": dict(coll.count_by_op),
+            "total_bytes": coll.total_bytes,
+            "total_count": coll.total_count,
+        },
+    }, None
+
+
+def _extrapolated_measurement(arch, shape_name, mesh, fsdp, fedavg,
+                              cfg_overrides=None, agg_mode="allreduce",
+                              expert_data=True, production_memory=False):
+    """Loop-aware cost via 2-layer two-point extrapolation (see module doc).
+
+    ``production_memory=True`` adds a 4th lowering WITHOUT any analysis
+    unrolling and reports ITS memory_analysis — the unrolled CE/attention
+    scans used for exact FLOP counting otherwise inflate the footprint
+    (they materialize every chunk buffer at once).  Used by the §Perf
+    hillclimb runs where before/after memory must be apples-to-apples.
+    """
+    cfg_overrides = dict(cfg_overrides or {})
+    base, reason = _lower_and_measure(
+        arch, shape_name, mesh, fsdp, fedavg,
+        {**cfg_overrides, "scan_unroll": True}, agg_mode, expert_data)
+    if reason:
+        return None, reason
+    if production_memory:
+        prod, _ = _lower_and_measure(
+            arch, shape_name, mesh, fsdp, fedavg,
+            cfg_overrides or None, agg_mode, expert_data)
+        base["memory"] = prod["memory"]
+    two = {**cfg_overrides, "num_layers": 2, "encoder_layers":
+           2 if get_arch(arch).encoder_layers else 0, "scan_unroll": True}
+    g1, _ = _lower_and_measure(arch, shape_name, mesh, fsdp, fedavg,
+                               {**two, "layer_unroll": 1}, agg_mode, expert_data)
+    g2, _ = _lower_and_measure(arch, shape_name, mesh, fsdp, fedavg,
+                               {**two, "layer_unroll": 2}, agg_mode, expert_data)
+    L = get_arch(arch).num_layers
+
+    def extrap(key, sub):
+        b = g2[key][sub] - g1[key][sub]
+        return base[key][sub] + max(b, 0.0) * (L - 1)
+
+    base["cost"]["flops_per_device"] = extrap("cost", "flops_per_device")
+    base["cost"]["bytes_per_device"] = extrap("cost", "bytes_per_device")
+    coll_b = {}
+    ops = set(base["collectives"]["bytes_by_op"]) \
+        | set(g1["collectives"]["bytes_by_op"]) \
+        | set(g2["collectives"]["bytes_by_op"])
+    for op in ops:
+        b = (g2["collectives"]["bytes_by_op"].get(op, 0)
+             - g1["collectives"]["bytes_by_op"].get(op, 0))
+        coll_b[op] = int(base["collectives"]["bytes_by_op"].get(op, 0)
+                         + max(b, 0) * (L - 1))
+    base["collectives"]["bytes_by_op"] = coll_b
+    base["collectives"]["total_bytes"] = sum(coll_b.values())
+    base["cost"]["extrapolated"] = True
+    return base, None
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, fsdp: bool = False,
+            fedavg: bool = False, save: bool = True, tag: str = "",
+            extrapolate: bool = True, cfg_overrides: dict | None = None,
+            agg_mode: str = "allreduce", expert_data: bool = True,
+            production_memory: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "fsdp": fsdp, "fedavg": fedavg, "tag": tag,
+        "extrapolated": extrapolate, "cfg_overrides": cfg_overrides,
+        "agg_mode": agg_mode, "expert_data": expert_data,
+    }
+    t0 = time.time()
+    try:
+        msharding.configure(
+            True, mesh_axes=mesh.axis_names,
+            manual_axes=() if SHAPES[shape_name].kind != "train"
+            else tuple(a for a in mesh.axis_names if a != "model"),
+        )
+        with jax.set_mesh(mesh):
+            if extrapolate:
+                meas, reason = _extrapolated_measurement(
+                    arch, shape_name, mesh, fsdp, fedavg, cfg_overrides,
+                    agg_mode, expert_data, production_memory)
+            else:
+                meas, reason = _lower_and_measure(
+                    arch, shape_name, mesh, fsdp, fedavg, cfg_overrides,
+                    agg_mode, expert_data)
+        if reason:
+            rec.update(status="skipped", reason=reason)
+            return _finish(rec, t0, save)
+
+        cfg = get_arch(arch)
+        rec.update(
+            status="ok",
+            **meas,
+            model={
+                "total_params": S.count_params(cfg),
+                "active_params": S.active_params(cfg),
+            },
+        )
+        rec["roofline"] = roofline_terms(rec)
+    except Exception as e:  # noqa: BLE001 — a failing combo is a bug report
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    finally:
+        msharding.configure(False)
+    return _finish(rec, t0, save)
+
+
+def _finish(rec: dict, t0: float, save: bool) -> dict:
+    rec["elapsed_s"] = round(time.time() - t0, 1)
+    if save:
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        suffix = ("_fsdp" if rec.get("fsdp") else "") + \
+            ("_fedavg" if rec.get("fedavg") else "") + \
+            (f"_{rec['tag']}" if rec.get("tag") else "")
+        out = RESULTS_DIR / f"{rec['arch']}_{rec['shape']}_{rec['mesh']}{suffix}.json"
+        out.write_text(json.dumps(rec, indent=2))
+    status = rec.get("status")
+    extra = ""
+    if status == "ok":
+        r = rec["roofline"]
+        extra = (f" dom={r['dominant']} "
+                 f"mem/dev={rec['memory']['total_bytes_per_device']/2**30:.2f}GiB")
+    elif status == "error":
+        extra = " " + rec.get("error", "")[:160]
+    print(f"[dryrun] {rec['arch']:26s} {rec['shape']:12s} {rec['mesh']:8s} "
+          f"{status:8s} {rec['elapsed_s']:7.1f}s{extra}", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--fedavg", action="store_true",
+                    help="FedAvg baseline aggregation instead of prioritized")
+    ap.add_argument("--no-extrapolate", action="store_true",
+                    help="skip the loop-cost correction (faster, undercounts)")
+    ap.add_argument("--attn-block", type=int, default=None,
+                    help="online-softmax attention block size (§Perf)")
+    ap.add_argument("--agg-mode", default="allreduce",
+                    choices=["allreduce", "rs_ag_bf16"])
+    ap.add_argument("--remat", choices=["on", "off"], default=None)
+    ap.add_argument("--experts-model-only", action="store_true",
+                    help="serve: shard experts over model axis only")
+    ap.add_argument("--production-memory", action="store_true",
+                    help="extra un-unrolled lowering for exact footprint")
+    ap.add_argument("--moe-a2a", action="store_true",
+                    help="explicit shard_map all_to_all MoE dispatch")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_fail = 0
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                overrides = {}
+                if args.moe_a2a:
+                    overrides["moe_dispatch"] = "a2a"
+                if args.attn_block:
+                    overrides["attn_block"] = args.attn_block
+                if args.remat:
+                    overrides["remat"] = args.remat == "on"
+                rec = run_one(arch, shape, multi_pod, fsdp=args.fsdp,
+                              fedavg=args.fedavg, tag=args.tag,
+                              extrapolate=not args.no_extrapolate,
+                              cfg_overrides=overrides or None,
+                              agg_mode=args.agg_mode,
+                              expert_data=not args.experts_model_only,
+                              production_memory=args.production_memory)
+                if rec["status"] == "error":
+                    n_fail += 1
+                else:
+                    n_ok += 1
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

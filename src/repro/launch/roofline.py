@@ -1,0 +1,105 @@
+"""Roofline-term computation from dry-run records (§Roofline).
+
+TPU v5e constants (per the assignment):
+  * 197 TFLOP/s bf16 per chip
+  * 819 GB/s HBM bandwidth per chip
+  * ~50 GB/s/link ICI
+
+``cost_analysis()`` / ``memory_analysis()`` operate on the SPMD module,
+i.e. they are **per-device** quantities; the roofline terms below therefore
+divide by per-chip peaks directly (equivalent to the global formulation
+``HLO_FLOPs_global / (chips × peak)``).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (v5e: 4 links/chip torus)
+
+
+def roofline_terms(rec: dict) -> dict:
+    """Compute the three roofline terms (seconds) for one dry-run record."""
+    flops = float(rec["cost"]["flops_per_device"])
+    bytes_hbm = float(rec["cost"]["bytes_per_device"])
+    bytes_coll = float(rec["collectives"]["total_bytes"])
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_hbm / HBM_BW
+    collective_s = bytes_coll / ICI_BW
+
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = terms[dominant]
+
+    # useful-FLOPs ratio: MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE),
+    # D = tokens processed per device per step (train); for serve steps the
+    # 6ND training formula does not apply — report forward-only 2·N·D.
+    n_active = rec["model"]["active_params"]
+    shape = rec["shape"]
+    tokens_global = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+                     "decode_32k": 128, "long_500k": 1}[shape]
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    tokens_per_device = tokens_global / chips
+    mult = 6.0 if shape == "train_4k" else 2.0
+    model_flops = mult * n_active * tokens_per_device
+    terms_out = dict(terms)
+    terms_out.update(
+        dominant=dominant.replace("_s", ""),
+        bound_s=bound_s,
+        model_flops_per_device=model_flops,
+        useful_flops_ratio=(model_flops / flops) if flops else 0.0,
+        ici_bytes_per_device=bytes_coll,
+    )
+    return terms_out
+
+
+def load_records(results_dir: Path) -> list:
+    recs = []
+    for p in sorted(results_dir.glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def format_table(recs: list) -> str:
+    """Markdown roofline table for EXPERIMENTS.md."""
+    hdr = ("| arch | shape | mesh | compute (ms) | memory (ms) | "
+           "collective (ms) | dominant | useful-FLOPs | bytes/dev (GiB) |")
+    sep = "|" + "---|" * 9
+    rows = [hdr, sep]
+    for r in recs:
+        if r.get("status") == "skipped":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"skipped | — | — |"
+            )
+            continue
+        if r.get("status") != "ok":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"ERROR | — | — |"
+            )
+            continue
+        t = r["roofline"]
+        m = r["memory"]["total_bytes_per_device"] / 2**30
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['compute_s']*1e3:.2f} | {t['memory_s']*1e3:.2f} "
+            f"| {t['collective_s']*1e3:.2f} | **{t['dominant']}** "
+            f"| {t['useful_flops_ratio']:.2f} | {m:.2f} |"
+        )
+    return "\n".join(rows)
+
+
+def main() -> None:
+    results_dir = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+    recs = load_records(results_dir)
+    print(format_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Serving launcher: batched prefill + decode on a mesh.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import restore_pytree
+from repro.configs.registry import get_arch
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.sharding_rules import param_shardings
+from repro.models import sharding as msharding
+from repro.models.registry import bundle as make_bundle
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--ring", action="store_true")
+    ap.add_argument("--restore", default=None)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+        mesh = make_host_mesh(model=1)
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    mdl = make_bundle(cfg)
+    params = mdl.init(jax.random.key(0))
+    if args.restore:
+        params = restore_pytree(args.restore, params)
+    params = jax.device_put(
+        params, param_shardings(params, mesh, expert_data=True))
+
+    B, P, N = args.requests, args.prompt_len, args.new_tokens
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32)}
+    if cfg.arch_type == "audio":
+        batch["frames"] = jnp.zeros(
+            (B, cfg.num_frontend_tokens, cfg.d_model), cfg.param_dtype)
+    layout = "ring" if args.ring and cfg.long_context_window else "full"
+
+    msharding.configure(True, mesh_axes=mesh.axis_names)
+    with jax.set_mesh(mesh):
+        cache = mdl.init_cache(B, P + N, layout)
+        prefill = jax.jit(lambda p, b, c: mdl.prefill(p, b, c, layout=layout))
+        decode = jax.jit(lambda p, t, i, c: mdl.decode_step(
+            p, t, i, c, layout=layout))
+
+        t0 = time.time()
+        logits, cache = prefill(params, batch, cache)
+        jax.block_until_ready(logits)
+        print(f"[serve] prefill {B}x{P}: {(time.time()-t0)*1e3:.0f}ms")
+
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        t0 = time.time()
+        for s in range(N - 1):
+            logits, cache = decode(params, tok,
+                                   jnp.asarray(P + s, jnp.int32), cache)
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        jax.block_until_ready(tok)
+        dt = time.time() - t0
+        print(f"[serve] {N-1} decode steps x {B}: {dt*1e3:.0f}ms "
+              f"({B*(N-1)/max(dt,1e-9):.1f} tok/s)")
+    msharding.configure(False)
+
+
+if __name__ == "__main__":
+    main()

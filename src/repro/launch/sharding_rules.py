@@ -1,0 +1,241 @@
+"""Parameter / cache / batch sharding rules for the production mesh.
+
+Rules are keyed by leaf name (the last path component) and specify the
+*trailing* dims; leading stacked dims (the scanned layer axis) are
+replicated.  Any dim whose size does not divide the mesh axis falls back to
+replicated — uneven shardings are never emitted.
+
+``fsdp=True`` additionally shards the largest weight dim over the data
+axes (ZeRO-3 style fully-sharded parameters) — a beyond-paper memory
+optimization evaluated in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+_M = "model"
+_D = ("pod", "data")  # data/client axes (collapsed where present)
+
+# name -> trailing-dims spec (entries: None | "model" | "data")
+_TRAILING: Dict[str, Tuple] = {
+    "embed": (_M, None),
+    "lm_head": (None, _M),
+    "wq": (None, _M), "wk": (None, _M), "wv": (None, _M),
+    "wo": (_M, None),
+    "bq": (_M,), "bk": (_M,), "bv": (_M,),
+    "router": (None, None),
+    "in_proj": (None, _M),
+    "out_proj": (_M, None),
+    "conv_w": (None, _M), "conv_b": (_M,),
+}
+# MoE expert tensors (3 trailing dims) — experts over the model axis
+# (federated train mode: the data axes are *client* axes, so expert weights
+# may only shard over model — every client holds the full expert set)
+_TRAILING_MOE = {
+    "w_gate": (_M, None, None),
+    "w_up": (_M, None, None),
+    "w_down": (_M, None, None),
+}
+# serve mode: experts over the data axes + inner dim over model —
+# full-mesh expert parallelism (dispatch all-to-all rides the data axes)
+_TRAILING_MOE_SERVE = {
+    "w_gate": (_D, None, _M),
+    "w_up": (_D, None, _M),
+    "w_down": (_D, _M, None),
+}
+# dense MLP (2 trailing dims)
+_TRAILING_MLP = {
+    "w_gate": (None, _M),
+    "w_up": (None, _M),
+    "w_down": (_M, None),
+}
+
+
+def _axis_size(mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis if a in mesh.shape]))
+    return mesh.shape.get(axis, 1)
+
+
+def _present(mesh, axis):
+    """Restrict an axis entry to names present in the mesh."""
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        kept = tuple(a for a in axis if a in mesh.axis_names)
+        return kept if kept else None
+    return axis if axis in mesh.axis_names else None
+
+
+def param_spec(path: str, leaf, mesh, fsdp: bool = False,
+               expert_data: bool = False, kv_replicated: bool = False) -> P:
+    name = path.split("/")[-1]
+    ndim = np.ndim(leaf)
+    table = _TRAILING
+    if kv_replicated and name in ("wk", "wv", "bk", "bv", "k_norm"):
+        # few-KV-head archs (kv < model axis): a model-sharded KV projection
+        # output cannot survive the [B,S,Hkv,hd] head split — GSPMD falls
+        # back to full rematerialization per layer (measured: TB-scale
+        # collective-permute traffic, §Perf HC1).  Replicating the small KV
+        # projections removes the resharding entirely.
+        return P(*([None] * ndim))
+    if name in ("w_gate", "w_up", "w_down"):
+        # distinguish MoE [.., E, D, F] (3 trailing) from dense [.., D, F]
+        is_moe = "mlp" in path and (ndim >= 3 and _looks_moe(path, leaf))
+        moe_table = _TRAILING_MOE_SERVE if expert_data else _TRAILING_MOE
+        table = {**_TRAILING, **(moe_table if is_moe else _TRAILING_MLP)}
+    trailing = table.get(name)
+    if trailing is None:
+        spec = (None,) * ndim
+    else:
+        spec = (None,) * (ndim - len(trailing)) + tuple(trailing)
+
+    # FSDP: shard one big replicated dim over the data axes
+    if fsdp and np.size(leaf) >= (1 << 20):
+        spec = _add_fsdp_axis(spec, leaf, mesh)
+
+    # divisibility fallback
+    shape = np.shape(leaf)
+    fixed = []
+    for d, axis in enumerate(spec):
+        axis = _present(mesh, axis)
+        if axis is not None and shape[d] % _axis_size(mesh, axis) != 0:
+            axis = None
+        fixed.append(axis)
+    return P(*fixed)
+
+
+def _looks_moe(path: str, leaf) -> bool:
+    # stacked MoE expert weights are [L, E, D, F] (4-D) or [E, D, F] (3-D);
+    # stacked dense MLP weights are [L, D, F] (3-D). Disambiguate by the
+    # path: scanned layer stacks live under "layers/"; expert tensors have
+    # one extra dim.
+    nd = np.ndim(leaf)
+    stacked = path.split("/")[0].endswith("layers")
+    return nd == (4 if stacked else 3)
+
+
+def _add_fsdp_axis(spec: Tuple, leaf, mesh) -> Tuple:
+    data_axes = _present(mesh, _D)
+    if data_axes is None:
+        return spec
+    shape = np.shape(leaf)
+    # choose the largest dim currently replicated and divisible
+    best, best_size = None, 0
+    for d, axis in enumerate(spec):
+        if axis is None and shape[d] % _axis_size(mesh, data_axes) == 0:
+            if shape[d] > best_size:
+                best, best_size = d, shape[d]
+    if best is None:
+        return spec
+    out = list(spec)
+    out[best] = data_axes
+    return tuple(out)
+
+
+def param_shardings(params: PyTree, mesh, fsdp: bool = False,
+                    expert_data: bool = False,
+                    kv_replicated: bool = False) -> PyTree:
+    from repro.utils.pytree import tree_map_with_path_names
+
+    return tree_map_with_path_names(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path, leaf, mesh, fsdp, expert_data,
+                             kv_replicated)
+        ),
+        params,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cache + batch shardings (serving path)
+# ---------------------------------------------------------------------------
+
+def cache_spec(path: str, leaf, mesh, shard_seq: bool = False) -> P:
+    """k/v: [L, B, Hkv, S, hd]; ssm: [L, B, H, P, N]; conv: [L, B, W, C].
+
+    Placement is greedy with divisibility-aware fallbacks — crucial because
+    most assigned archs have few KV heads (kv = 1/2/5/8) that cannot divide
+    the 16-way model axis, in which case the model axis moves to the cache
+    *length* dim (sequence-parallel cache).  ``shard_seq=True`` (long_500k,
+    batch=1) moves the data axes onto the length dim as well.
+    """
+    name = path.split("/")[-1]
+    data_axes = _present(mesh, _D)
+    model = _present(mesh, _M)
+    shape = np.shape(leaf)
+
+    def divides(d, axis):
+        return axis is not None and shape[d] % _axis_size(mesh, axis) == 0
+
+    def place(spec, d, axis):
+        if divides(d, axis) and spec[d] is None:
+            spec[d] = axis
+            return True
+        return False
+
+    spec = [None] * len(shape)
+    if name in ("k", "v", "xk", "xv"):
+        # dims: [L, B, H, S, hd]
+        if shard_seq:
+            # batch=1: length takes every axis it can
+            if not (place(spec, 2, model) and place(spec, 3, data_axes)):
+                combo = None
+                if data_axes is not None and model is not None:
+                    combo = tuple(
+                        (data_axes if isinstance(data_axes, tuple)
+                         else (data_axes,))
+                    ) + (model,)
+                for cand in (combo, data_axes, model):
+                    if place(spec, 3, cand):
+                        break
+        else:
+            place(spec, 1, data_axes)
+            place(spec, 2, model) or place(spec, 3, model)
+    elif name == "ssm":
+        # dims: [L, B, H, P, N]
+        if not shard_seq:
+            place(spec, 1, data_axes)
+        place(spec, 2, model) or place(spec, 3, model)
+    elif name == "conv":
+        # dims: [L, B, W, C]
+        if not shard_seq:
+            place(spec, 1, data_axes)
+        place(spec, 3, model)
+    return P(*spec)
+
+
+def cache_shardings(cache: PyTree, mesh, shard_seq: bool = False) -> PyTree:
+    from repro.utils.pytree import tree_map_with_path_names
+
+    return tree_map_with_path_names(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_spec(path, leaf, mesh, shard_seq)
+        ),
+        cache,
+    )
+
+
+def batch_spec(name: str, leaf, mesh, batch_sharded: bool = True) -> P:
+    """tokens/labels [B, S]; frames/extra_embeds [B, T, D]; mrope [3, B, S]."""
+    data_axes = _present(mesh, _D)
+    shape = np.shape(leaf)
+    nd = len(shape)
+    b_dim = 1 if name == "mrope_positions" else 0
+    spec = [None] * nd
+    if batch_sharded and data_axes is not None and shape[b_dim] % _axis_size(mesh, data_axes) == 0:
+        spec[b_dim] = data_axes
+    return P(*spec)
+
+
+def batch_shardings(batch: PyTree, mesh, batch_sharded: bool = True) -> PyTree:
+    return {
+        k: NamedSharding(mesh, batch_spec(k, v, mesh, batch_sharded))
+        for k, v in batch.items()
+    }

@@ -1,0 +1,153 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × input-shape) combo.
+
+No device allocation: the dry-run lowers against these structs (with
+NamedShardings attached), exactly the shannon/kernels pattern.  The same
+builders produce *concrete* arrays for smoke tests when ``concrete=True``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import SHAPES, InputShape
+from repro.launch import sharding_rules as rules
+from repro.models.config import ArchConfig
+from repro.models.registry import ModelBundle, bundle as make_bundle
+
+
+def _struct(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _make(shape, dtype, concrete: bool, sharding=None, fill=0):
+    if concrete:
+        return jnp.full(shape, fill, dtype)
+    return _struct(shape, dtype, sharding)
+
+
+def skip_reason(cfg: ArchConfig, shape: InputShape) -> Optional[str]:
+    """Assignment-sanctioned skips (documented in DESIGN.md §4)."""
+    if cfg.arch_type == "audio" and shape.name == "long_500k":
+        return ("encoder-decoder speech model: 524k decode context has no "
+                "defined semantics for this family (DESIGN.md §4)")
+    return None
+
+
+def decode_cache_layout(cfg: ArchConfig, shape: InputShape) -> str:
+    if shape.name == "long_500k" and cfg.long_context_window:
+        return "ring"
+    return "full"
+
+
+def train_batch(cfg: ArchConfig, shape: InputShape, mesh=None,
+                concrete: bool = False) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    sh = (lambda name, arr_shape: NamedSharding(
+        mesh, rules.batch_spec(name, np.empty(arr_shape, np.int8), mesh))
+    ) if mesh is not None else (lambda name, arr_shape: None)
+
+    batch = {
+        "tokens": _make((B, S), jnp.int32, concrete, sh("tokens", (B, S)), 1),
+        "labels": _make((B, S), jnp.int32, concrete, sh("labels", (B, S)), 1),
+    }
+    if cfg.arch_type == "audio":
+        T = cfg.num_frontend_tokens
+        batch["frames"] = _make((B, T, cfg.d_model), cfg.param_dtype, concrete,
+                                sh("frames", (B, T, cfg.d_model)))
+    if cfg.frontend == "vision":
+        T = cfg.num_frontend_tokens
+        batch["extra_embeds"] = _make(
+            (B, T, cfg.d_model), cfg.param_dtype, concrete,
+            sh("extra_embeds", (B, T, cfg.d_model)))
+        batch["mrope_positions"] = _make(
+            (3, B, S), jnp.int32, concrete,
+            sh("mrope_positions", (3, B, S)), 1)
+    return batch
+
+
+def prefill_batch(cfg: ArchConfig, shape: InputShape, mesh=None,
+                  concrete: bool = False) -> Dict[str, Any]:
+    b = train_batch(cfg, shape, mesh, concrete)
+    b.pop("labels")
+    return b
+
+
+def cache_struct(cfg: ArchConfig, shape: InputShape, mesh=None,
+                 concrete: bool = False, layout: Optional[str] = None):
+    """Cache stand-in sized for the shape's context length."""
+    mdl = make_bundle(cfg)
+    layout = layout or decode_cache_layout(cfg, shape)
+    cache = jax.eval_shape(
+        lambda: mdl.init_cache(shape.global_batch, shape.seq_len, layout)
+    )
+    if mesh is not None:
+        shard_seq = shape.global_batch == 1
+        shardings = rules.cache_shardings(cache, mesh, shard_seq=shard_seq)
+        cache = jax.tree.map(
+            lambda s, sh: _struct(s.shape, s.dtype, sh), cache, shardings
+        )
+    if concrete:
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache)
+    return cache
+
+
+def decode_inputs(cfg: ArchConfig, shape: InputShape, mesh=None,
+                  concrete: bool = False):
+    """(token, index, cache) stand-ins for one decode step."""
+    B = shape.global_batch
+    tok_sh = None
+    if mesh is not None:
+        tok_sh = NamedSharding(
+            mesh, rules.batch_spec("tokens", np.empty((B, 1), np.int8), mesh)
+        )
+    token = _make((B, 1), jnp.int32, concrete, tok_sh, 1)
+    index = (jnp.asarray(shape.seq_len - 1, jnp.int32) if concrete
+             else _struct((), jnp.int32))
+    cache = cache_struct(cfg, shape, mesh, concrete)
+    return token, index, cache
+
+
+def params_struct(cfg: ArchConfig, mesh=None, fsdp: bool = False,
+                  expert_data: bool = False,
+                  kv_replicated: Optional[bool] = None):
+    """Abstract parameter pytree (+ shardings) without allocation.
+
+    ``expert_data=True`` (serve paths only): expert-parallel MoE weights
+    over the data axes — not legal in federated train mode where those
+    axes are client axes."""
+    mdl = make_bundle(cfg)
+    params = jax.eval_shape(mdl.init, jax.random.key(0))
+    if mesh is not None:
+        if kv_replicated is None:
+            model_size = mesh.shape.get("model", 1)
+            kv_replicated = bool(
+                cfg.num_kv_heads and cfg.num_kv_heads % model_size != 0
+            )
+        shardings = rules.param_shardings(params, mesh, fsdp=fsdp,
+                                          expert_data=expert_data,
+                                          kv_replicated=kv_replicated)
+        params = jax.tree.map(
+            lambda s, sh: _struct(s.shape, s.dtype, sh), params, shardings
+        )
+    return params
+
+
+def count_params(cfg: ArchConfig) -> int:
+    params = jax.eval_shape(make_bundle(cfg).init, jax.random.key(0))
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+
+
+def active_params(cfg: ArchConfig) -> int:
+    """MoE active parameter count (per-token): non-expert + k/E of experts
+    + shared experts."""
+    total = count_params(cfg)
+    if not cfg.is_moe:
+        return total
+    expert = cfg.num_layers * 3 * cfg.d_model * (cfg.moe_d_ff or cfg.d_ff) \
+        * cfg.num_experts
+    active_expert = expert * cfg.num_experts_per_tok // cfg.num_experts
+    return total - expert + active_expert

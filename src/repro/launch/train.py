@@ -1,0 +1,122 @@
+"""Production federated-training launcher (``python -m repro.launch.train``).
+
+On a real TPU pod this runs the Mode-B federated train step on the
+production mesh; on this CPU container it runs the same program on the
+host mesh at a reduced configuration (``--reduced``) — the code path is
+identical, only mesh and scale differ.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+        --reduced --steps 20 --adjust
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import save_pytree
+from repro.configs.registry import get_arch
+from repro.data.synthetic import make_lm_federated
+from repro.federated.distributed import (
+    make_federated_adjust_step,
+    make_federated_train_step,
+)
+from repro.launch.mesh import client_axes, make_host_mesh, \
+    make_production_mesh, num_clients
+from repro.launch.sharding_rules import param_shardings
+from repro.models import sharding as msharding
+from repro.models.registry import bundle as make_bundle
+from repro.utils.pytree import tree_count_params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch-per-client", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=0.01)
+    ap.add_argument("--priority", default="Md,Ds,Ld")
+    ap.add_argument("--adjust", action="store_true")
+    ap.add_argument("--fedavg", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced model + host mesh (CPU container)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--save", default=None)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+        mesh = make_host_mesh(model=1)
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    K = num_clients(mesh)
+    caxes = client_axes(mesh)
+    print(f"[train] {cfg.name}: mesh {dict(mesh.shape)} -> {K} clients "
+          f"over {caxes}")
+
+    mdl = make_bundle(cfg)
+    params = mdl.init(jax.random.key(0))
+    print(f"[train] params {tree_count_params(params)/1e6:.1f}M")
+    params = jax.device_put(params, param_shardings(params, mesh))
+
+    name_to_idx = {"Ds": 0, "Ld": 1, "Md": 2}
+    priority = tuple(name_to_idx[p.strip()] for p in args.priority.split(","))
+
+    toks, _ = make_lm_federated(K, cfg.vocab_size, args.seq + 1,
+                                docs_per_client=32, seed=1)
+    rng = np.random.default_rng(0)
+
+    def sample_batch():
+        docs = rng.integers(0, toks.shape[1], size=(K, args.batch_per_client))
+        seqs = np.stack([toks[k, docs[k]] for k in range(K)])
+        seqs = seqs.reshape(K * args.batch_per_client, args.seq + 1)
+        out = {"tokens": jnp.asarray(seqs[:, :-1]),
+               "labels": jnp.asarray(seqs[:, 1:])}
+        if cfg.arch_type == "audio":
+            out["frames"] = jnp.zeros(
+                (seqs.shape[0], cfg.num_frontend_tokens, cfg.d_model),
+                cfg.param_dtype)
+        if cfg.frontend == "vision":
+            out["extra_embeds"] = jnp.zeros(
+                (seqs.shape[0], cfg.num_frontend_tokens, cfg.d_model),
+                cfg.param_dtype)
+        return out
+
+    msharding.configure(True, mesh_axes=mesh.axis_names, manual_axes=caxes)
+    with jax.set_mesh(mesh):
+        if args.adjust:
+            step_fn = jax.jit(make_federated_adjust_step(mdl, mesh, lr=args.lr))
+            prev_q = jnp.asarray(-1e9, jnp.float32)
+            prio_idx = jnp.asarray(0, jnp.int32)
+        else:
+            step_fn = jax.jit(make_federated_train_step(
+                mdl, mesh, lr=args.lr, priority=priority,
+                fedavg_baseline=args.fedavg))
+
+        t0 = time.time()
+        for step in range(args.steps):
+            batch = sample_batch()
+            if args.adjust:
+                val = {k: v[: max(1, K // 2)] for k, v in batch.items()}
+                params, stats = step_fn(params, batch, val, prev_q, prio_idx)
+                prev_q, prio_idx = stats["quality"], stats["priority_idx"]
+            else:
+                params, stats = step_fn(params, batch)
+            if step % 10 == 0 or step == args.steps - 1:
+                print(f"[train] step {step:4d} loss={float(stats['loss']):.4f} "
+                      f"({time.time()-t0:.0f}s)", flush=True)
+    msharding.configure(False)
+
+    if args.save:
+        save_pytree(args.save, jax.device_get(params),
+                    metadata={"arch": cfg.name, "steps": args.steps})
+        print(f"[train] saved {args.save}")
+
+
+if __name__ == "__main__":
+    main()

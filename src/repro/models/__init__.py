@@ -1,0 +1,4 @@
+from repro.models.config import ArchConfig
+from repro.models.registry import ModelBundle, bundle
+
+__all__ = ["ArchConfig", "ModelBundle", "bundle"]

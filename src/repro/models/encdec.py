@@ -1,0 +1,256 @@
+"""Whisper-style encoder-decoder backbone (assigned arch: whisper-small).
+
+Per the assignment carve-out, the mel-spectrogram + conv frontend is a STUB:
+``input_specs()`` provides precomputed frame embeddings ``[B, T_enc, D]``.
+This module implements the transformer backbone that consumes them:
+
+* encoder: non-causal self-attention stack over frames (sinusoidal pos),
+* decoder: causal self-attention + cross-attention + MLP, scanned,
+* serving: self-KV cache + one-shot cross-KV cache computed at prefill.
+
+Deviation notes (DESIGN.md §8): sinusoidal positions for both stacks
+(whisper uses learned decoder positions; immaterial for systems purposes).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.config import ArchConfig
+from repro.models.layers import (
+    apply_norm,
+    dense_init,
+    embed_init,
+    gated_mlp,
+    gated_mlp_init,
+    norm_init,
+)
+from repro.models.sharding import shard, shard_activation, BATCH_AXES, MODEL_AXIS
+
+Params = Dict[str, Any]
+
+
+def sinusoidal_positions(S: int, D: int) -> jax.Array:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(D // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-jnp.log(10000.0) * 2.0 * dim / D)
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)  # [S, D]
+
+
+def _init_enc_layer(rng, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(rng)
+    dt = cfg.param_dtype
+    return {
+        "ln1": norm_init(cfg.norm, cfg.d_model, dt),
+        "attn": attn_mod.attention_init(k1, cfg),
+        "ln2": norm_init(cfg.norm, cfg.d_model, dt),
+        "mlp": gated_mlp_init(k2, cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def _init_dec_layer(rng, cfg: ArchConfig) -> Params:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    dt = cfg.param_dtype
+    return {
+        "ln1": norm_init(cfg.norm, cfg.d_model, dt),
+        "attn": attn_mod.attention_init(k1, cfg),
+        "ln_x": norm_init(cfg.norm, cfg.d_model, dt),
+        "xattn": attn_mod.attention_init(k2, cfg),
+        "ln2": norm_init(cfg.norm, cfg.d_model, dt),
+        "mlp": gated_mlp_init(k3, cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def init_encdec_params(rng: jax.Array, cfg: ArchConfig) -> Params:
+    ke, kd, kt, kh = jax.random.split(rng, 4)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    p: Params = {
+        "embed": embed_init(kt, cfg.vocab_size, cfg.d_model, cfg.param_dtype),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "enc_norm": norm_init(cfg.norm, cfg.d_model, cfg.param_dtype),
+        "final_norm": norm_init(cfg.norm, cfg.d_model, cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(kh, cfg.d_model, cfg.vocab_size,
+                                  cfg.param_dtype)
+    return p
+
+
+def encode(params: Params, cfg: ArchConfig, frames: jax.Array,
+           use_pallas: bool = False) -> jax.Array:
+    """frames [B, T_enc, D] (stub frontend output) → encoder states."""
+    B, T, D = frames.shape
+    h = frames + sinusoidal_positions(T, D).astype(frames.dtype)
+    h = shard_activation(h)
+
+    def body(x, p_l):
+        hh = apply_norm(cfg.norm, x, p_l["ln1"], cfg.norm_eps)
+        out, _ = attn_mod.attention_apply(
+            p_l["attn"], cfg, hh, angles=None, causal=False,
+            use_pallas=use_pallas,
+        )
+        x = x + out
+        hh = apply_norm(cfg.norm, x, p_l["ln2"], cfg.norm_eps)
+        x = x + gated_mlp(p_l["mlp"], hh, cfg.act)
+        return shard_activation(x), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["enc_layers"],
+                        unroll=min(cfg.layer_unroll, cfg.encoder_layers))
+    return apply_norm(cfg.norm, h, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_layer(cfg: ArchConfig, p_l: Params, x, enc_out, cache_l, index,
+               mode: str, use_pallas: bool):
+    new_cache_l: Dict[str, jax.Array] = {}
+    hh = apply_norm(cfg.norm, x, p_l["ln1"], cfg.norm_eps)
+    kv_cache = {"k": cache_l["k"], "v": cache_l["v"]} if cache_l else None
+    out, new_kv = attn_mod.attention_apply(
+        p_l["attn"], cfg, hh, angles=None, causal=True,
+        cache=kv_cache, cache_index=index, use_pallas=use_pallas,
+    )
+    if new_kv:
+        new_cache_l.update(new_kv)
+    x = x + out
+
+    hh = apply_norm(cfg.norm, x, p_l["ln_x"], cfg.norm_eps)
+    if mode == "decode":
+        # cross K/V were projected and cached at prefill
+        out = _cross_from_cache(p_l["xattn"], cfg, hh,
+                                cache_l["xk"], cache_l["xv"])
+        new_cache_l["xk"], new_cache_l["xv"] = cache_l["xk"], cache_l["xv"]
+    else:
+        out, _ = attn_mod.attention_apply(
+            p_l["xattn"], cfg, hh, angles=None, causal=False,
+            cross_kv=(enc_out, enc_out), use_pallas=use_pallas,
+        )
+        if mode == "prefill":
+            hd = cfg.resolved_head_dim
+            k = enc_out @ p_l["xattn"]["wk"]
+            v = enc_out @ p_l["xattn"]["wv"]
+            if cfg.qkv_bias:
+                k = k + p_l["xattn"]["bk"]
+                v = v + p_l["xattn"]["bv"]
+            B, T, _ = enc_out.shape
+            new_cache_l["xk"] = k.reshape(B, T, cfg.num_kv_heads, hd).transpose(0, 2, 1, 3)
+            new_cache_l["xv"] = v.reshape(B, T, cfg.num_kv_heads, hd).transpose(0, 2, 1, 3)
+    x = x + out
+
+    hh = apply_norm(cfg.norm, x, p_l["ln2"], cfg.norm_eps)
+    x = x + gated_mlp(p_l["mlp"], hh, cfg.act)
+    return shard_activation(x), new_cache_l
+
+
+def _cross_from_cache(p_attn, cfg: ArchConfig, x, xk, xv):
+    """Cross-attention using prefill-cached projected encoder K/V."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p_attn["wq"]
+    if cfg.qkv_bias:
+        q = q + p_attn["bq"]
+    q = q.reshape(B, S, cfg.num_heads, hd).transpose(0, 2, 1, 3)
+    from repro.kernels.ref import attention_ref
+
+    out = attention_ref(q, xk, xv, causal=False)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, cfg.num_heads * hd)
+    return out @ p_attn["wo"]
+
+
+def _decoder(params, cfg, tokens, enc_out, cache, index, mode, use_pallas):
+    B, S = tokens.shape
+    h = jnp.take(shard(params["embed"], MODEL_AXIS, None), tokens, axis=0)
+    if mode == "decode":
+        # single position at `index` — compute directly
+        posvec = sinusoidal_positions_at(index, cfg.d_model)
+        h = h + posvec[None, None, :].astype(h.dtype)
+    else:
+        h = h + sinusoidal_positions(S, cfg.d_model)[None].astype(h.dtype)
+    h = shard_activation(h)
+
+    xs = (params["dec_layers"], cache if cache is not None else {})
+
+    def body(x, scanned):
+        p_l, cache_l = scanned
+        x, new_cache_l = _dec_layer(cfg, p_l, x, enc_out, cache_l, index,
+                                    mode, use_pallas)
+        return x, new_cache_l
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, new_cache = jax.lax.scan(
+        body, h, xs, unroll=min(cfg.layer_unroll, cfg.num_layers))
+    h = apply_norm(cfg.norm, h, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ head.astype(h.dtype)
+    return shard(logits, BATCH_AXES, None, MODEL_AXIS), (
+        new_cache if cache is not None else None
+    )
+
+
+def sinusoidal_positions_at(index: jax.Array, D: int) -> jax.Array:
+    dim = jnp.arange(D // 2, dtype=jnp.float32)
+    inv = jnp.exp(-jnp.log(10000.0) * 2.0 * dim / D)
+    ang = index.astype(jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Public API (mirrors transformer.py)
+# ---------------------------------------------------------------------------
+
+def encdec_loss(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+                use_pallas: bool = False):
+    """batch: frames [B, T, D], tokens [B, S], labels [B, S]."""
+    enc_out = encode(params, cfg, batch["frames"], use_pallas)
+    logits, _ = _decoder(params, cfg, batch["tokens"], enc_out,
+                         cache=None, index=None, mode="train",
+                         use_pallas=use_pallas)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    gold = jnp.take_along_axis(
+        logp, batch["labels"][..., None].astype(jnp.int32), axis=-1
+    )[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(gold)
+    loss = -jnp.sum(gold * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"ce": loss}
+
+
+def init_encdec_cache(cfg: ArchConfig, batch: int, max_len: int,
+                      enc_len: int, dtype=None) -> Dict[str, jax.Array]:
+    dt = dtype or cfg.param_dtype
+    L, hd = cfg.num_layers, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((L, batch, cfg.num_kv_heads, max_len, hd), dt),
+        "v": jnp.zeros((L, batch, cfg.num_kv_heads, max_len, hd), dt),
+        "xk": jnp.zeros((L, batch, cfg.num_kv_heads, enc_len, hd), dt),
+        "xv": jnp.zeros((L, batch, cfg.num_kv_heads, enc_len, hd), dt),
+    }
+
+
+def encdec_prefill(params: Params, cfg: ArchConfig, frames: jax.Array,
+                   tokens: jax.Array, cache: Dict[str, jax.Array],
+                   use_pallas: bool = False):
+    enc_out = encode(params, cfg, frames, use_pallas)
+    logits, new_cache = _decoder(
+        params, cfg, tokens, enc_out, cache,
+        index=jnp.zeros((), jnp.int32), mode="prefill", use_pallas=use_pallas,
+    )
+    return logits[:, -1:], new_cache
+
+
+def encdec_decode_step(params: Params, cfg: ArchConfig, token: jax.Array,
+                       index: jax.Array, cache: Dict[str, jax.Array],
+                       use_pallas: bool = False):
+    logits, new_cache = _decoder(
+        params, cfg, token, None, cache, index=index, mode="decode",
+        use_pallas=use_pallas,
+    )
+    return logits, new_cache

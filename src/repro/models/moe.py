@@ -1,0 +1,247 @@
+"""Mixture-of-Experts layer with expert-parallel gather dispatch.
+
+Covers both assigned MoE architectures:
+
+* llama4-maverick-400b-a17b — 128 experts, top-1, shared expert
+* kimi-k2-1t-a32b           — 384 experts, top-8, shared expert
+
+Design notes (TPU/mesh mapping):
+
+* Experts are sharded over the ``model`` axis; tokens arrive sharded over
+  the batch axes.  Dispatch therefore induces the MoE all-to-all — visible
+  as collective traffic in the roofline.
+* Dispatch is *gather-based*: instead of a ``[T, E, C]`` one-hot dispatch
+  tensor (infeasible at E=384) we compute each assignment's position inside
+  its expert with a sort-free ``bincount + stable-argsort`` and build an
+  ``[E, C]`` token-index table; dispatch and combine are then pure gathers.
+  Memory is O(T·k + E·C·D) instead of O(T·E·C).
+* Capacity ``C = ceil(T·k/E · capacity_factor)``; overflow tokens are
+  dropped (standard capacity-based routing), counted in ``aux``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import _ACTS, dense_init, gated_mlp, gated_mlp_init
+from repro.models.sharding import shard, MODEL_AXIS
+
+Params = Dict[str, jax.Array]
+
+
+def moe_init(rng: jax.Array, cfg: ArchConfig, dtype=None) -> Params:
+    dt = dtype or cfg.param_dtype
+    d, f, e = cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(rng, 5)
+    std = 1.0 / (d ** 0.5)
+    p: Params = {
+        "router": dense_init(ks[0], d, e, jnp.float32),  # router in f32
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * std).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * std).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32) / (f ** 0.5)).astype(dt),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = gated_mlp_init(
+            ks[4], d, f * cfg.num_shared_experts, dt
+        )
+    return p
+
+
+def _positions_in_expert(flat_e: jax.Array, num_experts: int) -> jax.Array:
+    """Rank of each assignment inside its expert (stable order), O(T·k).
+
+    ``flat_e [A]`` expert ids → ``pos [A]`` with pos < count(expert) and
+    stable in assignment order — computed via stable argsort instead of an
+    ``[A, E]`` cumsum (A can be ~1M).
+    """
+    A = flat_e.shape[0]
+    counts = jnp.zeros((num_experts,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts                 # [E]
+    order = jnp.argsort(flat_e, stable=True)             # [A]
+    ranks_sorted = jnp.arange(A, dtype=jnp.int32) - starts[flat_e[order]]
+    pos = jnp.zeros((A,), jnp.int32).at[order].set(ranks_sorted)
+    return pos
+
+
+def moe_apply(
+    params: Params, cfg: ArchConfig, x: jax.Array
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x [B, S, D] → (out [B, S, D], aux dict with load-balance stats)."""
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = xt.astype(jnp.float32) @ params["router"]        # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                    # [T, k]
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(T * k)
+    pos = _positions_in_expert(flat_e, E)                     # [T*k]
+    C = int(-(-T * k * cfg.capacity_factor // E))             # ceil
+    # decode / tiny batches: worst-case per-expert load is T (top-k experts
+    # are distinct per token) — make those dropless so serving is exact.
+    C = max(C, min(T, 256))
+    keep = pos < C
+
+    # token-index table: slot (e, c) ← source token; sentinel row T = zeros
+    tok_ids = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    slot_src = jnp.full((E, C), T, jnp.int32)
+    slot_src = slot_src.at[flat_e, pos].set(
+        jnp.where(keep, tok_ids, T), mode="drop"
+    )
+
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, D), xt.dtype)], axis=0)
+    dispatched = jnp.take(xt_pad, slot_src.reshape(E * C), axis=0)
+    dispatched = dispatched.reshape(E, C, D)
+    dispatched = shard(dispatched, MODEL_AXIS, None, None)
+
+    act = _ACTS[cfg.act]
+    g = act(jnp.einsum("ecd,edf->ecf", dispatched, params["w_gate"]))
+    h = g * jnp.einsum("ecd,edf->ecf", dispatched, params["w_up"])
+    out_slots = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    out_slots = shard(out_slots, MODEL_AXIS, None, None)
+
+    # combine: assignments are token-major, so [T*k] gathers reshape to [T, k]
+    gathered = out_slots.reshape(E * C, D)[
+        jnp.clip(flat_e * C + pos, 0, E * C - 1)
+    ]                                                          # [T*k, D]
+    w = (top_w.reshape(T * k) * keep.astype(jnp.float32))[:, None]
+    out = jnp.sum(
+        (gathered.astype(jnp.float32) * w).reshape(T, k, D), axis=1
+    ).astype(x.dtype)
+
+    if cfg.num_shared_experts:
+        out = out + gated_mlp(params["shared"], xt, cfg.act)
+
+    # Switch-style load-balance auxiliary loss + utilization stats
+    frac_tokens = jnp.zeros((E,), jnp.float32).at[flat_e].add(
+        keep.astype(jnp.float32)
+    ) / jnp.maximum(T * k, 1)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux_loss = E * jnp.sum(frac_tokens * frac_probs)
+    dropped = 1.0 - jnp.sum(keep.astype(jnp.float32)) / (T * k)
+    return out.reshape(B, S, D), {
+        "aux_loss": aux_loss,
+        "dropped_frac": dropped,
+        "expert_counts": frac_tokens * (T * k),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical shard_map dispatch (serving path, beyond-paper — §Perf HC1)
+# ---------------------------------------------------------------------------
+
+def moe_a2a_apply(
+    params: Params, cfg: ArchConfig, x: jax.Array, mesh, data_axes,
+) -> jax.Array:
+    """Expert-parallel MoE with an *explicit* all_to_all dispatch.
+
+    The gather-based path above lets GSPMD infer the cross-device movement
+    of the ``[E, C, D]`` dispatch tensor, which lowers to TB-scale
+    collective-permutes (measured, EXPERIMENTS §Perf HC1).  Here the data
+    axes go *manual* (`shard_map`): each shard routes its local tokens,
+    packs per-destination send buffers, and one ``all_to_all`` moves
+    exactly the routed payload (~T·k·D bytes) each way.  Experts stay
+    sharded over the data axes (E/n per shard) with their inner dim
+    auto-sharded over `model`.
+
+    Serving-only: the backward path of shard_map+all_to_all is not needed
+    (train mode keeps experts model-sharded — DESIGN.md §7b.3).
+    """
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    n = 1
+    for a in data_axes:
+        n *= mesh.shape[a]
+    assert E % n == 0, (E, n)
+    E_loc = E // n
+
+    def local(x_loc, router, w_gate, w_up, w_down, shared):
+        # x_loc [B_loc, S, D]; w_* [E_loc, D, F] (F auto-sharded on model)
+        Bl = x_loc.shape[0]
+        T = Bl * S
+        xt = x_loc.reshape(T, D)
+        logits = xt.astype(jnp.float32) @ router
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_e = jax.lax.top_k(probs, k)                 # [T, k]
+        top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+        flat_e = top_e.reshape(T * k)
+        dest = flat_e // E_loc                                 # owner shard
+        pos = _positions_in_expert(dest, n)                    # slot per dest
+        cap = int(-(-T * k * cfg.capacity_factor // n))
+        keep = pos < cap
+
+        tok_ids = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+        xt_pad = jnp.concatenate([xt, jnp.zeros((1, D), xt.dtype)], axis=0)
+        send_tok = jnp.zeros((n, cap, D), xt.dtype)
+        send_eid = jnp.full((n, cap), E_loc, jnp.int32)        # sentinel
+        src = jnp.where(keep, tok_ids, T)
+        send_tok = send_tok.at[dest, pos].set(
+            jnp.take(xt_pad, src, axis=0), mode="drop")
+        send_eid = send_eid.at[dest, pos].set(
+            jnp.where(keep, flat_e % E_loc, E_loc), mode="drop")
+
+        # ---- exchange: one all_to_all each way -----------------------
+        recv_tok = jax.lax.all_to_all(send_tok, data_axes, 0, 0, tiled=True)
+        recv_eid = jax.lax.all_to_all(send_eid, data_axes, 0, 0, tiled=True)
+
+        # ---- local expert compute ------------------------------------
+        A = n * cap
+        r_tok = recv_tok.reshape(A, D)
+        r_eid = recv_eid.reshape(A)
+        r_pos = _positions_in_expert(r_eid, E_loc + 1)
+        C_loc = int(-(-A * cfg.capacity_factor // max(E_loc, 1)))
+        r_keep = (r_pos < C_loc) & (r_eid < E_loc)
+        slot_src = jnp.full((E_loc, C_loc), A, jnp.int32)
+        slot_src = slot_src.at[r_eid, r_pos].set(
+            jnp.where(r_keep, jnp.arange(A, dtype=jnp.int32), A), mode="drop")
+        r_pad = jnp.concatenate([r_tok, jnp.zeros((1, D), r_tok.dtype)], 0)
+        disp = jnp.take(r_pad, slot_src.reshape(-1), axis=0).reshape(
+            E_loc, C_loc, D)
+
+        act = _ACTS[cfg.act]
+        g = act(jnp.einsum("ecd,edf->ecf", disp, w_gate))
+        h = g * jnp.einsum("ecd,edf->ecf", disp, w_up)
+        out_slots = jnp.einsum("ecf,efd->ecd", h, w_down).reshape(-1, D)
+
+        # un-dispatch locally, send back
+        back = jnp.zeros((A, D), x_loc.dtype)
+        flat_slot = jnp.clip(r_eid * C_loc + r_pos, 0, E_loc * C_loc - 1)
+        back = jnp.where(
+            r_keep[:, None], jnp.take(out_slots, flat_slot, axis=0), 0.0
+        ).astype(x_loc.dtype)
+        back = back.reshape(n, cap, D)
+        ret = jax.lax.all_to_all(back, data_axes, 0, 0, tiled=True)
+
+        # combine at the source: assignment i lives at ret[dest_i, pos_i]
+        flat_ret = ret.reshape(n * cap, D)
+        idx = jnp.clip(dest * cap + pos, 0, n * cap - 1)
+        gathered = jnp.take(flat_ret, idx, axis=0)             # [T*k, D]
+        w = (top_w.reshape(T * k) * keep.astype(jnp.float32))[:, None]
+        out = jnp.sum(
+            (gathered.astype(jnp.float32) * w).reshape(T, k, D), axis=1
+        ).astype(x_loc.dtype)
+        if cfg.num_shared_experts:
+            out = out + gated_mlp(shared, xt, cfg.act)
+        return out.reshape(Bl, S, D)
+
+    from jax.sharding import PartitionSpec as P
+
+    shared = params.get("shared", {
+        "w_gate": jnp.zeros((0,)), "w_up": jnp.zeros((0,)),
+        "w_down": jnp.zeros((0,))})
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(data_axes, None, None), P(), P(data_axes, None, None),
+                  P(data_axes, None, None), P(data_axes, None, None), P()),
+        out_specs=P(data_axes, None, None),
+        axis_names=set(data_axes),
+        check_vma=False,
+    )(x, params["router"], params["w_gate"], params["w_up"],
+      params["w_down"], shared)

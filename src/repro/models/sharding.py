@@ -1,0 +1,78 @@
+"""Logical→mesh sharding annotations for the model zoo.
+
+Models call :func:`shard` on activations/params with *mesh axis names*
+(("data",), "model", None, ...).  The launcher configures which axes are
+active and which are *manual* (wrapped by shard_map, e.g. the federated
+client axes): manual axes are stripped from specs because inside shard_map
+those dimensions are already local.
+
+When disabled (unit tests on 1 device) ``shard`` is the identity, so the
+model code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = {"enabled": False, "manual_axes": frozenset(), "mesh_axes": frozenset()}
+
+
+def configure(enabled: bool, mesh_axes: Sequence[str] = (),
+              manual_axes: Sequence[str] = ()) -> None:
+    _STATE["enabled"] = enabled
+    _STATE["mesh_axes"] = frozenset(mesh_axes)
+    _STATE["manual_axes"] = frozenset(manual_axes)
+
+
+@contextmanager
+def sharding_env(mesh_axes: Sequence[str], manual_axes: Sequence[str] = ()):
+    prev = dict(_STATE)
+    configure(True, mesh_axes, manual_axes)
+    try:
+        yield
+    finally:
+        _STATE.update(prev)
+
+
+def _filter(axis):
+    """Drop axes that are manual or absent from the active mesh."""
+    if axis is None:
+        return None
+    if isinstance(axis, (tuple, list)):
+        kept = tuple(a for a in axis if _filter(a) is not None)
+        return kept if kept else None
+    if axis in _STATE["manual_axes"] or axis not in _STATE["mesh_axes"]:
+        return None
+    return axis
+
+
+def spec(*axes) -> P:
+    return P(*[_filter(a) for a in axes])
+
+
+def shard(x: jax.Array, *axes) -> jax.Array:
+    """Constrain ``x``'s sharding; no-op when annotations are disabled."""
+    if not _STATE["enabled"]:
+        return x
+    s = spec(*axes)
+    if all(a is None for a in s):
+        return x
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+# Canonical logical placements used across the zoo -------------------------
+BATCH_AXES: Tuple[str, ...] = ("pod", "data")   # batch dim placement
+MODEL_AXIS = "model"                            # tensor-parallel placement
+
+
+def shard_activation(x: jax.Array) -> jax.Array:
+    """[B, S, D] activations: batch over data axes."""
+    return shard(x, BATCH_AXES, None, None)
+
+
+def shard_heads(x: jax.Array) -> jax.Array:
+    """[B, H, S, D] attention tensors: heads over the model axis."""
+    return shard(x, BATCH_AXES, MODEL_AXIS, None, None)

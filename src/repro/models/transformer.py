@@ -1,0 +1,421 @@
+"""Decoder-only LM assembly: dense / MoE / SSM / hybrid, scan-over-layers.
+
+One code path covers 9 of the 10 assigned architectures (whisper's
+encoder-decoder lives in ``encdec.py`` and reuses these blocks):
+
+* homogeneous layer stacks are scanned (``lax.scan`` over stacked params) so
+  HLO size and compile time are depth-independent — an 80-layer 72B model
+  lowers like a 2-layer one;
+* heterogeneous *patterns* (gemma3's 5:1 local:global, dual rope thetas) are
+  scanned per-layer **metadata arrays** (traced window sizes, rope-variant
+  flags), never unrolled Python branches;
+* the LM loss is computed with a sequence-chunked scan so ``[B, S, V]``
+  logits (V up to 262k) are never materialized;
+* decode uses stacked caches (full or ring layout) carried through the same
+  layer scan.
+
+Modes: ``train`` (no cache) / ``prefill`` (cache write from 0) /
+``decode`` (single-token step at a traced index).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ArchConfig
+from repro.models.layers import (
+    apply_norm,
+    dense_init,
+    embed_init,
+    gated_mlp,
+    gated_mlp_init,
+    mrope_angles,
+    norm_init,
+    rope_angles,
+)
+from repro.models.sharding import shard, shard_activation, BATCH_AXES, MODEL_AXIS
+
+Params = Dict[str, Any]
+_HUGE_WINDOW = 1 << 30
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_layer(rng: jax.Array, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(rng, 6)
+    dt = cfg.param_dtype
+    p: Params = {"ln1": norm_init(cfg.norm, cfg.d_model, dt)}
+    if cfg.block_type in ("attn", "hybrid"):
+        p["attn"] = attn_mod.attention_init(ks[0], cfg)
+    if cfg.block_type in ("ssm", "hybrid"):
+        p["ssm"] = ssm_mod.ssm_init(ks[1], cfg)
+    if cfg.block_type == "hybrid":
+        # Hymba: learnable per-branch output scales (normalized fusion)
+        p["beta_attn"] = jnp.ones((cfg.d_model,), dt)
+        p["beta_ssm"] = jnp.ones((cfg.d_model,), dt)
+    if cfg.is_moe:
+        p["ln2"] = norm_init(cfg.norm, cfg.d_model, dt)
+        p["mlp"] = moe_mod.moe_init(ks[2], cfg)
+    elif cfg.d_ff:
+        p["ln2"] = norm_init(cfg.norm, cfg.d_model, dt)
+        p["mlp"] = gated_mlp_init(ks[3], cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_lm_params(rng: jax.Array, cfg: ArchConfig) -> Params:
+    k_embed, k_layers, k_head = jax.random.split(rng, 3)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    p: Params = {
+        "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model, cfg.param_dtype),
+        "layers": layers,
+        "final_norm": norm_init(cfg.norm, cfg.d_model, cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab_size,
+                                  cfg.param_dtype)
+    return p
+
+
+def layer_meta(cfg: ArchConfig) -> Dict[str, jax.Array]:
+    """Per-layer scanned metadata (traced window + rope-variant flag)."""
+    windows, global_rope = [], []
+    for i in range(cfg.num_layers):
+        w = cfg.layer_window(i)
+        if i in cfg.global_layer_indices:
+            w = None  # explicit full-attention layers (hymba first/mid/last)
+        windows.append(w if w else _HUGE_WINDOW)
+        global_rope.append(0.0 if w else 1.0)  # pattern: global layers = no window
+    return {
+        "window": jnp.asarray(windows, jnp.int32),
+        "global_rope": jnp.asarray(global_rope, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Layer application (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _layer_apply(
+    cfg: ArchConfig,
+    p: Params,
+    x: jax.Array,
+    meta_l: Dict[str, jax.Array],
+    angles: Optional[jax.Array],
+    angles_global: Optional[jax.Array],
+    cache_l: Dict[str, jax.Array],
+    index: Optional[jax.Array],
+    mode: str,
+    cache_layout: str,
+    use_pallas: bool,
+) -> Tuple[jax.Array, Dict[str, jax.Array], jax.Array]:
+    """One block. Returns (x, new_cache_layer, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg.norm, x, p["ln1"], cfg.norm_eps)
+
+    window = meta_l["window"] if cfg.layer_windows is not None else None
+    ang = angles
+    if angles_global is not None and angles is not None:
+        flag = meta_l["global_rope"]
+        ang = angles * (1.0 - flag) + angles_global * flag
+
+    branch_outs = []
+    new_cache_l: Dict[str, jax.Array] = {}
+    if cfg.block_type in ("attn", "hybrid"):
+        kv_cache = None
+        if mode != "train" and "k" in cache_l:
+            kv_cache = {"k": cache_l["k"], "v": cache_l["v"]}
+        out_a, new_kv = attn_mod.attention_apply(
+            p["attn"], cfg, h, ang,
+            causal=True, window=window,
+            cache=kv_cache, cache_index=index, cache_layout=cache_layout,
+            use_pallas=use_pallas,
+        )
+        branch_outs.append(("attn", out_a))
+        if new_kv is not None:
+            new_cache_l.update(new_kv)
+    if cfg.block_type in ("ssm", "hybrid"):
+        if mode == "decode":
+            ssm_state = {"ssm": cache_l["ssm"], "conv": cache_l["conv"]}
+            out_s, new_ssm = ssm_mod.ssm_decode_step(p["ssm"], cfg, h, ssm_state)
+        else:
+            ssm_state = None
+            if mode == "prefill":
+                ssm_state = {"ssm": cache_l["ssm"], "conv": cache_l["conv"]}
+            out_s, new_ssm = ssm_mod.ssm_apply(p["ssm"], cfg, h, ssm_state)
+        branch_outs.append(("ssm", out_s))
+        if new_ssm is not None:
+            new_cache_l.update(new_ssm)
+
+    if cfg.block_type == "hybrid":
+        out = 0.5 * (branch_outs[0][1] * p["beta_attn"]
+                     + branch_outs[1][1] * p["beta_ssm"])
+    else:
+        out = branch_outs[0][1]
+    x = x + out
+
+    if "mlp" in p:
+        h2 = apply_norm(cfg.norm, x, p["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            if cfg.moe_dispatch == "a2a":
+                from repro.models.sharding import _STATE
+
+                mesh_obj = jax.sharding.get_abstract_mesh()
+                data_axes = tuple(a for a in _STATE["mesh_axes"]
+                                  if a != "model"
+                                  and a not in _STATE["manual_axes"])
+                mlp_out = moe_mod.moe_a2a_apply(
+                    p["mlp"], cfg, h2, mesh_obj, data_axes)
+            else:
+                mlp_out, moe_aux = moe_mod.moe_apply(p["mlp"], cfg, h2)
+                aux = aux + cfg.router_aux_coef * moe_aux["aux_loss"]
+        else:
+            mlp_out = gated_mlp(p["mlp"], h2, cfg.act)
+        x = x + mlp_out
+    return shard_activation(x), new_cache_l, aux
+
+
+def _run_layers(
+    cfg: ArchConfig,
+    params: Params,
+    x: jax.Array,
+    angles: Optional[jax.Array],
+    angles_global: Optional[jax.Array],
+    cache: Optional[Dict[str, jax.Array]],
+    index: Optional[jax.Array],
+    mode: str,
+    cache_layout: str,
+    use_pallas: bool,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]], jax.Array]:
+    meta = layer_meta(cfg)
+    xs = (params["layers"], meta, cache if cache is not None else {})
+
+    def body(carry, scanned):
+        xc, aux_acc = carry
+        p_l, meta_l, cache_l = scanned
+        xc, new_cache_l, aux = _layer_apply(
+            cfg, p_l, xc, meta_l, angles, angles_global, cache_l, index,
+            mode, cache_layout, use_pallas,
+        )
+        return (xc, aux_acc + aux), new_cache_l
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else None)
+        body = jax.checkpoint(body, policy=policy)
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), xs,
+        unroll=min(cfg.layer_unroll, cfg.num_layers),
+    )
+    return x, (new_cache if cache is not None else None), aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(cfg: ArchConfig, params: Params, tokens: jax.Array,
+                  extra_embeds: Optional[jax.Array]) -> jax.Array:
+    emb = shard(params["embed"], MODEL_AXIS, None)
+    h = jnp.take(emb, tokens, axis=0)
+    if extra_embeds is not None:
+        # modality stub: frontend embeddings replace the leading positions
+        n = extra_embeds.shape[1]
+        h = jnp.concatenate([extra_embeds.astype(h.dtype), h[:, n:]], axis=1)
+    return shard_activation(h)
+
+
+def _angles_for(cfg: ArchConfig, positions: jax.Array,
+                mrope_positions: Optional[jax.Array]):
+    """Returns (angles, angles_global) — None for attention-free archs."""
+    if not cfg.num_heads:
+        return None, None
+    hd = cfg.resolved_head_dim
+    if cfg.mrope_sections is not None:
+        pos3 = mrope_positions
+        if pos3 is None:
+            pos3 = jnp.broadcast_to(positions, (3,) + positions.shape)
+        angles = mrope_angles(pos3, hd, cfg.rope_theta, cfg.mrope_sections)
+        return angles, None
+    angles = rope_angles(positions, hd, cfg.rope_theta)
+    angles_global = None
+    if cfg.global_rope_theta is not None:
+        angles_global = rope_angles(positions, hd, cfg.global_rope_theta)
+    return angles, angles_global
+
+
+def _unembed(cfg: ArchConfig, params: Params, h: jax.Array) -> jax.Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ w.astype(h.dtype)
+    return shard(logits, BATCH_AXES, None, MODEL_AXIS)
+
+
+# ---------------------------------------------------------------------------
+# Public: train-mode forward + loss
+# ---------------------------------------------------------------------------
+
+def lm_hidden(
+    params: Params, cfg: ArchConfig, tokens: jax.Array,
+    extra_embeds: Optional[jax.Array] = None,
+    mrope_positions: Optional[jax.Array] = None,
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward → (final hidden [B, S, D], aux loss)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h = _embed_tokens(cfg, params, tokens, extra_embeds)
+    angles, angles_global = _angles_for(cfg, positions, mrope_positions)
+    h, _, aux = _run_layers(cfg, params, h, angles, angles_global,
+                            cache=None, index=None, mode="train",
+                            cache_layout="full", use_pallas=use_pallas)
+    h = apply_norm(cfg.norm, h, params["final_norm"], cfg.norm_eps)
+    return h, aux
+
+
+def lm_logits(params: Params, cfg: ArchConfig, tokens: jax.Array,
+              **kw) -> jax.Array:
+    """Materialized logits — smoke tests / small configs only."""
+    h, _ = lm_hidden(params, cfg, tokens, **kw)
+    return _unembed(cfg, params, h)
+
+
+def chunked_ce_loss(
+    cfg: ArchConfig, params: Params, h: jax.Array, labels: jax.Array,
+    mask: Optional[jax.Array] = None, chunk: int = 512,
+) -> jax.Array:
+    """Cross-entropy without materializing [B, S, V]: scan over S-chunks."""
+    B, S, D = h.shape
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    n = (S + pad) // c
+    hc = h.reshape(B, n, c, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, c).transpose(1, 0, 2)
+    mc = mask.reshape(B, n, c).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        hh, ll, mm = inp
+        logits = (hh @ w.astype(hh.dtype)).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, ll[..., None].astype(jnp.int32), axis=-1
+        )[..., 0]
+        nll = (logz - gold) * mm
+        return carry + jnp.sum(nll), None
+
+    body = jax.checkpoint(body)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc, mc),
+                            unroll=n if cfg.scan_unroll else 1)
+    return total / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def lm_loss(
+    params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """batch: tokens [B, S], labels [B, S], optional loss_mask/extra_embeds."""
+    h, aux = lm_hidden(
+        params, cfg, batch["tokens"],
+        extra_embeds=batch.get("extra_embeds"),
+        mrope_positions=batch.get("mrope_positions"),
+        use_pallas=use_pallas,
+    )
+    ce = chunked_ce_loss(cfg, params, h, batch["labels"],
+                         batch.get("loss_mask"))
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(
+    cfg: ArchConfig, batch: int, max_len: int, layout: str = "full",
+    dtype=None,
+) -> Dict[str, jax.Array]:
+    """Stacked decode cache [L, ...]. ``layout='ring'`` allocates the
+    sliding window only (long-context serving variant)."""
+    dt = dtype or cfg.param_dtype
+    L = cfg.num_layers
+    cache: Dict[str, jax.Array] = {}
+    if cfg.block_type in ("attn", "hybrid"):
+        if layout == "ring":
+            W = cfg.long_context_window or max_len
+            s_alloc = min(W, max_len)
+        else:
+            s_alloc = max_len
+        hd = cfg.resolved_head_dim
+        cache["k"] = jnp.zeros((L, batch, cfg.num_kv_heads, s_alloc, hd), dt)
+        cache["v"] = jnp.zeros((L, batch, cfg.num_kv_heads, s_alloc, hd), dt)
+    if cfg.block_type in ("ssm", "hybrid"):
+        H, P, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+        conv_ch = cfg.ssm_d_inner + 2 * cfg.ssm_state
+        cache["ssm"] = jnp.zeros((L, batch, H, P, N), jnp.float32)
+        cache["conv"] = jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_ch), dt)
+    return cache
+
+
+def cache_specs(cfg: ArchConfig):
+    """Logical sharding of each cache leaf (axis names, by leaf key)."""
+    return {
+        "k": (None, BATCH_AXES, MODEL_AXIS, None, None),
+        "v": (None, BATCH_AXES, MODEL_AXIS, None, None),
+        "ssm": (None, BATCH_AXES, MODEL_AXIS, None, None),
+        "conv": (None, BATCH_AXES, None, None),
+    }
+
+
+def lm_prefill(
+    params: Params, cfg: ArchConfig, tokens: jax.Array,
+    cache: Dict[str, jax.Array],
+    extra_embeds: Optional[jax.Array] = None,
+    mrope_positions: Optional[jax.Array] = None,
+    cache_layout: str = "full",
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Prefill the cache with a full prompt → (last-token logits, cache)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h = _embed_tokens(cfg, params, tokens, extra_embeds)
+    angles, angles_global = _angles_for(cfg, positions, mrope_positions)
+    h, new_cache, _ = _run_layers(
+        cfg, params, h, angles, angles_global, cache,
+        index=jnp.zeros((), jnp.int32), mode="prefill",
+        cache_layout=cache_layout, use_pallas=use_pallas,
+    )
+    h = apply_norm(cfg.norm, h, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(cfg, params, h[:, -1:])
+    return logits, new_cache
+
+
+def lm_decode_step(
+    params: Params, cfg: ArchConfig, token: jax.Array, index: jax.Array,
+    cache: Dict[str, jax.Array], cache_layout: str = "full",
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step: token [B, 1], index = #tokens already in cache."""
+    B = token.shape[0]
+    positions = jnp.broadcast_to(index[None, None], (B, 1))
+    h = _embed_tokens(cfg, params, token, None)
+    angles, angles_global = _angles_for(cfg, positions, None)
+    h, new_cache, _ = _run_layers(
+        cfg, params, h, angles, angles_global, cache, index=index,
+        mode="decode", cache_layout=cache_layout, use_pallas=use_pallas,
+    )
+    h = apply_norm(cfg.norm, h, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(cfg, params, h)
+    return logits, new_cache

@@ -1,0 +1,17 @@
+from repro.optim.optimizers import (
+    AdamState,
+    Optimizer,
+    SGDState,
+    adam,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    constant_schedule,
+    cosine_schedule,
+    sgd,
+)
+
+__all__ = [
+    "AdamState", "Optimizer", "SGDState", "adam", "adamw", "apply_updates",
+    "clip_by_global_norm", "constant_schedule", "cosine_schedule", "sgd",
+]

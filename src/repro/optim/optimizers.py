@@ -1,0 +1,148 @@
+"""Optimizers built from scratch (no optax in this environment).
+
+Minimal GradientTransformation-style API::
+
+    opt = sgd(lr=0.01, momentum=0.9)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Everything is a pytree-of-arrays state so it jits, vmaps (per-client
+optimizer states in the federated simulator) and shards cleanly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import PyTree
+
+Schedule = Callable[[jax.Array], jax.Array]  # step -> lr
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., Tuple[PyTree, PyTree]]  # (grads, state, params)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: Optional[PyTree]
+
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False,
+        weight_decay: float = 0.0) -> Optimizer:
+    """SGD with optional momentum/nesterov — the paper's local optimizer."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        mom = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return SGDState(jnp.zeros((), jnp.int32), mom)
+
+    def update(grads, state, params=None):
+        if weight_decay and params is not None:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+        eta = sched(state.step)
+        if momentum:
+            new_m = jax.tree.map(lambda m, g: momentum * m + g, state.momentum, grads)
+            if nesterov:
+                upd = jax.tree.map(lambda m, g: -eta * (momentum * m + g), new_m, grads)
+            else:
+                upd = jax.tree.map(lambda m: -eta * m, new_m)
+            return upd, SGDState(state.step + 1, new_m)
+        upd = jax.tree.map(lambda g: -eta * g, grads)
+        return upd, SGDState(state.step + 1, None)
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    """AdamW with fp32 moments (moments stay fp32 under bf16 params)."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        f32zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(
+            jnp.zeros((), jnp.int32),
+            jax.tree.map(f32zeros, params),
+            jax.tree.map(f32zeros, params),
+        )
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        eta = sched(state.step)
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, g32)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, g32)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def _upd(m, v, p):
+            u = -eta * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                u = u - eta * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if params is not None and weight_decay:
+            upd = jax.tree.map(_upd, mu, nu, params)
+        else:
+            upd = jax.tree.map(lambda m, v: _upd(m, v, None), mu, nu)
+        return upd, AdamState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def adam(lr, **kw) -> Optimizer:
+    return adamw(lr, weight_decay=0.0, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def constant_schedule(value: float) -> Schedule:
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine_schedule(peak: float, warmup_steps: int, total_steps: int,
+                    floor: float = 0.0) -> Schedule:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / jnp.maximum(warmup_steps, 1)
+        frac = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+            0.0, 1.0,
+        )
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return sched
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    from repro.utils.pytree import tree_sq_norm
+
+    nrm = jnp.sqrt(tree_sq_norm(grads))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(nrm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads)

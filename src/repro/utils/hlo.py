@@ -1,0 +1,138 @@
+"""HLO text analysis: collective-traffic accounting for the roofline model.
+
+``compiled.cost_analysis()`` reports FLOPs and bytes-accessed but *not* the
+bytes moved by cross-device collectives, so we parse the optimized HLO text
+and sum the operand sizes of every collective op
+(all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute,
+plus their -start async variants).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1, "f8e8m0fnu": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g. ``bf16[4096,5120]{1,0}`` or ``f32[]`` — capture dtype + dims.
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*[a-z0-9]*)\[([0-9,]*)\]")
+# result definition: ``%name = <type> opcode(...`` or ``name = <type> opcode(``
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0  # token/opaque types
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclass
+class CollectiveStats:
+    """Per-opcode operand-byte totals parsed from HLO text."""
+
+    bytes_by_op: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    count_by_op: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+    def summary(self) -> str:
+        parts = [
+            f"{op}: n={self.count_by_op[op]} bytes={self.bytes_by_op[op]:,}"
+            for op in sorted(self.bytes_by_op)
+        ]
+        return "; ".join(parts) if parts else "no collectives"
+
+
+def _result_type_bytes(rhs: str) -> int:
+    """Bytes of the result type on a def line's right-hand side.
+
+    ``rhs`` looks like ``(bf16[8,4]{1,0}, u32[]) all-gather-start(...)`` or
+    ``bf16[8,4]{1,0} all-reduce(...)``.  We sum every shape that appears
+    *before* the opcode's opening parenthesis of the operand list.
+    """
+    # Find where the operand list starts: the first '(' that follows an
+    # opcode word (letters/dashes) rather than starting the tuple type.
+    m = re.search(r"[a-z][a-z0-9\-]*\(", rhs)
+    type_part = rhs[: m.start()] if m else rhs
+    return sum(shape_bytes(d, s) for d, s in _SHAPE_RE.findall(type_part))
+
+
+def parse_collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective op in optimized HLO text.
+
+    Strategy: build a name → result-type-bytes symbol table from every
+    instruction definition, then for each collective instruction sum the
+    sizes of its operands.  Where operand types are printed inline (the
+    common case in optimized dumps) we use them directly; otherwise we fall
+    back to the symbol table.
+
+    ``-start``/``-done`` async pairs are counted once (on the ``-start``).
+    """
+    stats = CollectiveStats()
+    symtab: Dict[str, int] = {}
+
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        symtab[name] = _result_type_bytes(rhs)
+
+        opcode = None
+        for coll in _COLLECTIVES:
+            # match `all-reduce(`, `all-reduce-start(`, `all-reduce.1(` etc.,
+            # but not `all-reduce-done(` (avoid double counting) and not
+            # `all-gather` appearing inside `all-gather-done`.
+            if re.search(rf"\b{coll}(?:-start)?(?:\.\d+)?\(", rhs):
+                if re.search(rf"\b{coll}-done", rhs):
+                    continue
+                opcode = coll
+                break
+        if opcode is None:
+            continue
+
+        # operand list = text inside the outermost parens after the opcode
+        om = re.search(rf"\b{opcode}(?:-start)?(?:\.\d+)?\((.*)\)", rhs)
+        operands = om.group(1) if om else ""
+        # inline operand shapes, e.g. ``f32[64,64]{1,0} %add.5``
+        inline = _SHAPE_RE.findall(operands)
+        nbytes = sum(shape_bytes(d, s) for d, s in inline)
+        if nbytes == 0:
+            # fall back: resolve %operand names through the symbol table
+            for opname in re.findall(r"%([\w.\-]+)", operands):
+                nbytes += symtab.get(opname, 0)
+        if nbytes == 0:
+            # last resort: use the result size (all-reduce result == operand)
+            nbytes = symtab.get(name, 0)
+        stats.bytes_by_op[opcode] += nbytes
+        stats.count_by_op[opcode] += 1
+
+    return stats

@@ -1,0 +1,121 @@
+"""Pytree utilities used across the framework.
+
+All helpers are pure functions over arbitrary JAX pytrees so that the
+aggregation machinery in :mod:`repro.core` stays agnostic of the model
+architecture (CNN, dense transformer, MoE, SSM, ...).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_axpy(alpha, x: PyTree, y: PyTree) -> PyTree:
+    """alpha * x + y, elementwise over the pytree."""
+    return jax.tree.map(lambda a, b: alpha * a + b, x, y)
+
+
+def tree_dot(a: PyTree, b: PyTree) -> jax.Array:
+    """Inner product of two pytrees (summed over every leaf)."""
+    leaves = jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b)
+    return jax.tree.reduce(jnp.add, leaves, jnp.zeros((), jnp.float32))
+
+
+def tree_sq_norm(tree: PyTree) -> jax.Array:
+    """Squared L2 norm of a pytree, accumulated in float32."""
+    leaves = jax.tree.map(
+        lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), tree
+    )
+    return jax.tree.reduce(jnp.add, leaves, jnp.zeros((), jnp.float32))
+
+
+def tree_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(tree_sq_norm(tree))
+
+
+def tree_weighted_sum(trees_stacked: PyTree, weights: jax.Array) -> PyTree:
+    """Weighted sum over a leading "client" axis.
+
+    ``trees_stacked`` has leaves of shape ``[K, ...]``; ``weights`` is ``[K]``.
+    Returns a pytree with the leading axis contracted:
+    ``out = sum_k weights[k] * leaf[k]``.
+    """
+    def _one(leaf: jax.Array) -> jax.Array:
+        w = weights.astype(jnp.float32).reshape(
+            (-1,) + (1,) * (leaf.ndim - 1)
+        )
+        return jnp.sum(w * leaf.astype(jnp.float32), axis=0).astype(leaf.dtype)
+
+    return jax.tree.map(_one, trees_stacked)
+
+
+def tree_count_params(tree: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_flatten_to_vector(tree: PyTree) -> jax.Array:
+    """Concatenate every leaf (raveled) into one 1-D float32 vector."""
+    leaves = jax.tree.leaves(tree)
+    return jnp.concatenate([x.astype(jnp.float32).ravel() for x in leaves])
+
+
+def tree_unflatten_from_vector(vec: jax.Array, like: PyTree) -> PyTree:
+    """Inverse of :func:`tree_flatten_to_vector` given a template pytree."""
+    leaves, treedef = jax.tree.flatten(like)
+    out = []
+    offset = 0
+    for leaf in leaves:
+        n = int(leaf.size)
+        out.append(vec[offset : offset + n].reshape(leaf.shape).astype(leaf.dtype))
+        offset += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_map_with_path_names(fn: Callable[[str, jax.Array], Any], tree: PyTree) -> PyTree:
+    """tree.map where ``fn`` also receives a '/'-joined key-path string."""
+    def _fmt(path) -> str:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(_fmt(p), x), tree)
+
+
+def tree_stack(trees: Sequence[PyTree]) -> PyTree:
+    """Stack a list of identically-structured pytrees on a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_index(tree_stacked: PyTree, i) -> PyTree:
+    """Select index ``i`` along the leading axis of every leaf."""
+    return jax.tree.map(lambda x: x[i], tree_stacked)

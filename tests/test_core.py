@@ -1,0 +1,171 @@
+"""Tests for criteria measurement, aggregation, and Algorithm 1."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AggregationConfig,
+    ClientContext,
+    adjust_round,
+    adjust_round_vectorized,
+    aggregate_models,
+    aggregate_round,
+    compute_weights,
+    measure_criteria,
+    normalize_criteria,
+)
+from repro.core.criteria import label_diversity, model_divergence
+from repro.utils.pytree import tree_weighted_sum
+
+
+class TestCriteria:
+    def test_normalize_sums_to_one(self):
+        raw = jnp.array([10.0, 30.0, 60.0])
+        c = normalize_criteria(raw)
+        np.testing.assert_allclose(np.asarray(c), [0.1, 0.3, 0.6], rtol=1e-6)
+
+    def test_normalize_with_mask(self):
+        raw = jnp.array([10.0, 30.0, 60.0])
+        c = normalize_criteria(raw, mask=jnp.array([1.0, 1.0, 0.0]))
+        np.testing.assert_allclose(np.asarray(c), [0.25, 0.75, 0.0], rtol=1e-6)
+
+    def test_normalize_degenerate(self):
+        c = normalize_criteria(jnp.zeros(4))
+        np.testing.assert_allclose(np.asarray(c), 0.25, rtol=1e-6)
+
+    def test_label_diversity(self):
+        ctx = ClientContext(label_counts=jnp.array([3, 0, 1, 0, 7]))
+        assert float(label_diversity(ctx)) == 3.0
+
+    def test_model_divergence_decreasing(self):
+        small = ClientContext(update={"w": jnp.full((10,), 0.01)})
+        large = ClientContext(update={"w": jnp.full((10,), 10.0)})
+        assert float(model_divergence(small)) > float(model_divergence(large))
+
+    def test_measure_criteria_stack(self):
+        ctx = ClientContext(
+            num_examples=jnp.asarray(12.0),
+            label_counts=jnp.array([1, 1, 0]),
+            update={"w": jnp.ones((4,))},
+        )
+        vals = measure_criteria(("Ds", "Ld", "Md"), ctx)
+        assert vals.shape == (3,)
+        assert float(vals[0]) == 12.0
+        assert float(vals[1]) == 2.0
+
+
+class TestAggregate:
+    def test_weighted_sum_matches_manual(self):
+        stacked = {"w": jnp.arange(12.0).reshape(3, 4)}
+        w = jnp.array([0.2, 0.3, 0.5])
+        out = aggregate_models(stacked, w)
+        expected = 0.2 * stacked["w"][0] + 0.3 * stacked["w"][1] + 0.5 * stacked["w"][2]
+        np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(expected), rtol=1e-6)
+
+    def test_kernel_path_matches_jnp(self):
+        rng = np.random.default_rng(0)
+        stacked = {"a": jnp.asarray(rng.normal(size=(5, 300)), jnp.float32),
+                   "b": jnp.asarray(rng.normal(size=(5, 17)), jnp.float32)}
+        w = jnp.asarray(rng.uniform(size=5), jnp.float32)
+        ref = aggregate_models(stacked, w, use_kernel=False)
+        ker = aggregate_models(stacked, w, use_kernel=True)
+        for k in stacked:
+            np.testing.assert_allclose(np.asarray(ker[k]), np.asarray(ref[k]),
+                                       rtol=2e-5, atol=2e-5)
+
+    def test_aggregate_round_weights(self):
+        c = jnp.array([[0.9, 0.9, 0.9], [0.1, 0.1, 0.1]])
+        stacked = {"w": jnp.stack([jnp.ones(4), jnp.zeros(4)])}
+        cfg = AggregationConfig()
+        out, p = aggregate_round(c, stacked, cfg)
+        assert float(p[0]) > float(p[1])
+        assert abs(float(p.sum()) - 1.0) < 1e-6
+
+    def test_operator_variants_run(self):
+        c = jnp.array([[0.9, 0.5, 0.2], [0.2, 0.5, 0.9]])
+        for op in ("prioritized", "weighted_average", "owa", "choquet"):
+            w = compute_weights(c, AggregationConfig(operator=op))
+            assert abs(float(w.sum()) - 1.0) < 1e-5
+
+
+def _mk_stacked(K=4, d=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(K, d)), jnp.float32)}
+
+
+class TestAdjust:
+    def setup_method(self):
+        self.c = jnp.asarray(
+            np.random.default_rng(1).uniform(0.1, 0.9, size=(4, 3)), jnp.float32
+        )
+        self.stacked = _mk_stacked()
+        self.cfg = AggregationConfig()
+
+    def test_accepts_when_improving(self):
+        res = adjust_round(
+            self.c, self.stacked, self.cfg, (0, 1, 2), prev_quality=-100.0,
+            eval_fn=lambda p: jnp.mean(p["w"]),
+        )
+        assert res.priority == (0, 1, 2)
+        assert not res.backtracked
+        assert res.num_evaluated == 1
+
+    def test_backtracks_on_regression(self):
+        # quality depends on the permutation through the weights: make an
+        # eval that penalizes the current permutation's aggregate
+        cur = aggregate_models(
+            self.stacked, compute_weights(self.c, self.cfg, (0, 1, 2))
+        )
+
+        def eval_fn(p):
+            # distance from current candidate: current scores lowest
+            return jnp.sum(jnp.abs(p["w"] - cur["w"]))
+
+        res = adjust_round(
+            self.c, self.stacked, self.cfg, (0, 1, 2), prev_quality=1e-3,
+            eval_fn=eval_fn,
+        )
+        assert res.backtracked
+        assert res.priority != (0, 1, 2)
+
+    def test_least_worst_fallback(self):
+        res = adjust_round(
+            self.c, self.stacked, self.cfg, (0, 1, 2), prev_quality=1e9,
+            eval_fn=lambda p: jnp.mean(p["w"]),
+        )
+        # nothing beats prev: falls back to max-quality candidate, all tried
+        assert res.num_evaluated == 6
+        assert res.backtracked
+
+    def test_vectorized_matches_sequential_acceptance(self):
+        eval_fn = lambda p: jnp.mean(p["w"] ** 2)
+        seq = adjust_round(self.c, self.stacked, self.cfg, (0, 1, 2),
+                           prev_quality=-100.0, eval_fn=eval_fn)
+        from repro.core.operators import all_permutations
+        perms = all_permutations(3)
+        vec = adjust_round_vectorized(
+            self.c, self.stacked, self.cfg,
+            current_priority_idx=jnp.asarray(perms.index((0, 1, 2))),
+            prev_quality=jnp.asarray(-100.0), eval_fn=eval_fn,
+        )
+        assert perms[int(vec.priority)] == seq.priority
+        np.testing.assert_allclose(float(vec.quality), float(seq.quality),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(vec.global_params["w"]), np.asarray(seq.global_params["w"]),
+            rtol=1e-5,
+        )
+
+    def test_vectorized_fallback_matches(self):
+        eval_fn = lambda p: jnp.mean(p["w"])
+        seq = adjust_round(self.c, self.stacked, self.cfg, (0, 1, 2),
+                           prev_quality=1e9, eval_fn=eval_fn)
+        from repro.core.operators import all_permutations
+        perms = all_permutations(3)
+        vec = adjust_round_vectorized(
+            self.c, self.stacked, self.cfg,
+            current_priority_idx=jnp.asarray(perms.index((0, 1, 2))),
+            prev_quality=jnp.asarray(1e9), eval_fn=eval_fn,
+        )
+        assert perms[int(vec.priority)] == seq.priority

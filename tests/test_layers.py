@@ -1,0 +1,140 @@
+"""Building-block tests: norms, RoPE / M-RoPE, sharding env, criteria
+extensions, synthetic data properties (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ClientContext, measure_criteria
+from repro.models.layers import (
+    apply_rope,
+    gated_mlp,
+    gated_mlp_init,
+    layernorm,
+    mrope_angles,
+    rmsnorm,
+    rope_angles,
+)
+from repro.models.sharding import configure, shard, sharding_env, spec
+
+
+class TestNorms:
+    def test_rmsnorm_unit_scale(self):
+        x = jax.random.normal(jax.random.key(0), (4, 64)) * 3.0
+        out = rmsnorm(x, jnp.zeros(64))
+        rms = jnp.sqrt(jnp.mean(out**2, axis=-1))
+        np.testing.assert_allclose(np.asarray(rms), 1.0, rtol=1e-3)
+
+    def test_layernorm_zero_mean(self):
+        x = jax.random.normal(jax.random.key(1), (4, 64)) + 5.0
+        out = layernorm(x, jnp.ones(64), jnp.zeros(64))
+        np.testing.assert_allclose(np.asarray(out.mean(-1)), 0.0, atol=1e-4)
+
+
+class TestRope:
+    def test_rope_preserves_norm(self):
+        x = jax.random.normal(jax.random.key(0), (1, 2, 8, 64))
+        angles = rope_angles(jnp.arange(8)[None], 64, 10_000.0)
+        rotated = apply_rope(x, angles)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(rotated), axis=-1),
+            np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-4)
+
+    def test_rope_relative_property(self):
+        """<R(p)q, R(p+d)k> depends only on d (the RoPE invariant)."""
+        q = jax.random.normal(jax.random.key(1), (1, 1, 1, 64))
+        k = jax.random.normal(jax.random.key(2), (1, 1, 1, 64))
+
+        def dot_at(p, d):
+            aq = rope_angles(jnp.asarray([[p]]), 64, 10_000.0)
+            ak = rope_angles(jnp.asarray([[p + d]]), 64, 10_000.0)
+            return float(jnp.sum(apply_rope(q, aq) * apply_rope(k, ak)))
+
+        assert abs(dot_at(3, 5) - dot_at(11, 5)) < 1e-3
+        assert abs(dot_at(3, 5) - dot_at(3, 7)) > 1e-5
+
+    def test_mrope_equals_rope_for_equal_streams(self):
+        """With t=h=w positions, M-RoPE degenerates to standard RoPE."""
+        S, hd = 6, 64
+        pos = jnp.arange(S)[None]                      # [1, S]
+        pos3 = jnp.broadcast_to(pos, (3, 1, S))
+        a_std = rope_angles(pos, hd, 10_000.0)
+        a_m = mrope_angles(pos3, hd, 10_000.0, (16, 8, 8))
+        np.testing.assert_allclose(np.asarray(a_m), np.asarray(a_std),
+                                   rtol=1e-6)
+
+    def test_mrope_streams_differ(self):
+        pos3 = jnp.stack([jnp.zeros((1, 4)), jnp.ones((1, 4)) * 3,
+                          jnp.ones((1, 4)) * 7]).astype(jnp.int32)
+        a = mrope_angles(pos3, 64, 10_000.0, (16, 8, 8))
+        # temporal channels (first 16) follow stream 0 (= zeros)
+        np.testing.assert_allclose(np.asarray(a[..., :16]), 0.0, atol=1e-6)
+        assert float(jnp.abs(a[..., 16:]).sum()) > 0
+
+
+class TestShardingEnv:
+    def test_disabled_is_identity(self):
+        configure(False)
+        x = jnp.ones((4, 4))
+        assert shard(x, "data", None) is x
+
+    def test_manual_axes_stripped(self):
+        with sharding_env(mesh_axes=("data", "model"), manual_axes=("data",)):
+            s = spec(("pod", "data"), "model")
+            assert s == jax.sharding.PartitionSpec(None, "model")
+
+    def test_absent_axes_stripped(self):
+        with sharding_env(mesh_axes=("data",)):
+            s = spec("model", "data")
+            assert s == jax.sharding.PartitionSpec(None, "data")
+
+
+class TestCriteriaExtensions:
+    def test_load_balance_entropy(self):
+        balanced = ClientContext(expert_counts=jnp.ones(8) * 10)
+        skewed = ClientContext(expert_counts=jnp.asarray(
+            [80.0, 0, 0, 0, 0, 0, 0, 0]))
+        vals = measure_criteria(("load_balance",), balanced)
+        vals_s = measure_criteria(("load_balance",), skewed)
+        assert abs(float(vals[0]) - 1.0) < 1e-5      # uniform = max entropy
+        assert float(vals_s[0]) < 0.1
+
+    def test_staleness_and_capability(self):
+        fresh = ClientContext(staleness=jnp.asarray(0.0),
+                              flops_per_sec=jnp.asarray(1e12))
+        stale = ClientContext(staleness=jnp.asarray(9.0),
+                              flops_per_sec=jnp.asarray(1e12))
+        a = measure_criteria(("staleness", "compute_capability"), fresh)
+        b = measure_criteria(("staleness", "compute_capability"), stale)
+        assert float(a[0]) == 1.0 and abs(float(b[0]) - 0.1) < 1e-6
+        np.testing.assert_allclose(float(a[1]), 1e12, rtol=1e-5)
+        assert float(a[1]) == float(b[1])
+
+    def test_registry_rejects_duplicates(self):
+        from repro.core import register_criterion
+
+        with pytest.raises(ValueError):
+            register_criterion("dataset_size", lambda ctx: jnp.zeros(()))
+
+
+@given(st.integers(2, 30), st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_synth_data_properties(n_clients, seed):
+    """SynthFEMNIST invariants hold for any client count / seed."""
+    from repro.data.synthetic import make_synth_femnist
+
+    d = make_synth_femnist(num_clients=n_clients, mean_samples=12,
+                           seed=seed % 10_000)
+    assert d.num_clients == n_clients
+    assert (d.counts >= 8).all()
+    assert d.images.min() >= 0.0 and d.images.max() <= 1.0
+    assert (d.labels >= 0).all() and (d.labels < 62).all()
+    # every client has a non-empty test split
+    assert (d.test_counts >= 2).all()
+
+
+def test_gated_mlp_shapes():
+    p = gated_mlp_init(jax.random.key(0), 16, 32, jnp.float32)
+    x = jnp.ones((2, 5, 16))
+    assert gated_mlp(p, x).shape == (2, 5, 16)

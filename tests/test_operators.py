@@ -1,0 +1,132 @@
+"""Unit + property tests for the multi-criteria aggregation operators."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import operators as ops
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def crit_matrix(min_k=1, max_k=8, m=3):
+    return st.integers(min_k, max_k).flatmap(
+        lambda k: st.lists(
+            st.lists(st.floats(0.0, 1.0, allow_nan=False), min_size=m, max_size=m),
+            min_size=k, max_size=k,
+        )
+    ).map(lambda rows: np.asarray(rows, np.float32))
+
+
+class TestPrioritized:
+    def test_paper_example_1(self):
+        """Paper §2.2 Example 1: c = (0.5, 0.8, 0.9), order C1>C2>C3."""
+        c = jnp.array([0.5, 0.8, 0.9])
+        s = ops.prioritized_score(c, (0, 1, 2))
+        assert abs(float(s) - 1.26) < 1e-6
+
+    def test_paper_example_1_reversed(self):
+        """Reversed order C3>C2>C1.
+
+        The paper quotes 1.82, but its own recurrence gives
+        lambda = (1, 0.9, 0.9*0.8=0.72) -> 0.9 + 0.72 + 0.72*0.5 = 1.98;
+        the 1.82 value reuses lambda_3 = 0.4 from the first ordering (an
+        arithmetic slip in the paper). We assert the recurrence.
+        """
+        c = jnp.array([0.5, 0.8, 0.9])
+        s = ops.prioritized_score(c, (2, 1, 0))
+        assert abs(float(s) - 1.98) < 1e-5
+
+    def test_batched_matches_single(self):
+        c = jnp.array([[0.5, 0.8, 0.9], [1.0, 0.0, 1.0]])
+        s = ops.prioritized_score(c, (1, 0, 2))
+        for i in range(2):
+            si = ops.prioritized_score(c[i], (1, 0, 2))
+            assert abs(float(s[i]) - float(si)) < 1e-6
+
+    @given(crit_matrix())
+    @settings(max_examples=50, deadline=None)
+    def test_bounds(self, c):
+        """Prioritized score lies in [0, m] for c in [0,1]^m."""
+        m = c.shape[1]
+        for perm in ops.all_permutations(m):
+            s = np.asarray(ops.prioritized_score(jnp.asarray(c), perm))
+            assert np.all(s >= -1e-6)
+            assert np.all(s <= m + 1e-5)
+
+    @given(crit_matrix(max_k=4))
+    @settings(max_examples=30, deadline=None)
+    def test_first_criterion_dominates(self, c):
+        """If the top-priority criterion is 0, the total score is bounded by
+        the remaining criteria attenuated to 0 after it: lambda_2 = 0."""
+        c = np.array(c)
+        c[:, 0] = 0.0
+        s = np.asarray(ops.prioritized_score(jnp.asarray(c), (0, 1, 2)))
+        assert np.all(s <= 1e-6)  # everything after priority-1 is zeroed
+
+    def test_monotone_in_top_criterion(self):
+        lo = ops.prioritized_score(jnp.array([0.2, 0.5, 0.5]), (0, 1, 2))
+        hi = ops.prioritized_score(jnp.array([0.9, 0.5, 0.5]), (0, 1, 2))
+        assert float(hi) > float(lo)
+
+    def test_gradient_flows(self):
+        g = jax.grad(lambda c: ops.prioritized_score(c, (0, 1, 2)))(
+            jnp.array([0.5, 0.8, 0.9])
+        )
+        assert np.all(np.isfinite(np.asarray(g)))
+
+
+class TestWeights:
+    @given(st.lists(st.floats(0.0, 100.0, allow_nan=False), min_size=1, max_size=32))
+    @settings(max_examples=50, deadline=None)
+    def test_weights_normalized(self, scores):
+        w = np.asarray(ops.scores_to_weights(jnp.asarray(scores, jnp.float32)))
+        assert abs(w.sum() - 1.0) < 1e-5
+        assert np.all(w >= 0)
+
+    def test_degenerate_all_zero(self):
+        w = np.asarray(ops.scores_to_weights(jnp.zeros(4)))
+        np.testing.assert_allclose(w, 0.25, rtol=1e-6)
+
+
+class TestOWA:
+    def test_or_and_mean(self):
+        c = jnp.array([[0.2, 0.9, 0.5]])
+        w_or = jnp.array([1.0, 0.0, 0.0])
+        w_and = jnp.array([0.0, 0.0, 1.0])
+        w_mean = jnp.ones(3) / 3
+        assert abs(float(ops.owa_score(c, w_or)[0]) - 0.9) < 1e-6
+        assert abs(float(ops.owa_score(c, w_and)[0]) - 0.2) < 1e-6
+        assert abs(float(ops.owa_score(c, w_mean)[0]) - (1.6 / 3)) < 1e-6
+
+    @given(crit_matrix())
+    @settings(max_examples=30, deadline=None)
+    def test_between_min_and_max(self, c):
+        w = ops.owa_quantifier_weights(c.shape[1], alpha=2.0)
+        s = np.asarray(ops.owa_score(jnp.asarray(c), w))
+        assert np.all(s >= c.min(1) - 1e-5)
+        assert np.all(s <= c.max(1) + 1e-5)
+
+
+class TestChoquet:
+    @given(crit_matrix(max_k=4))
+    @settings(max_examples=30, deadline=None)
+    def test_between_min_and_max(self, c):
+        mu = ops.lambda_fuzzy_measure([0.4, 0.4, 0.4], lam=-0.3)
+        s = np.asarray(ops.choquet_score(jnp.asarray(c), mu))
+        assert np.all(s >= c.min(1) - 1e-5)
+        assert np.all(s <= c.max(1) + 1e-5)
+
+    def test_additive_measure_is_weighted_mean(self):
+        # lam=0 with equal singletons -> plain mean
+        mu = ops.lambda_fuzzy_measure([1 / 3] * 3, lam=0.0)
+        c = jnp.array([[0.1, 0.5, 0.9]])
+        s = float(ops.choquet_score(c, mu)[0])
+        assert abs(s - 0.5) < 1e-5
+
+
+def test_all_permutations():
+    perms = ops.all_permutations(3)
+    assert len(perms) == 6
+    assert len(set(perms)) == 6
