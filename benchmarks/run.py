@@ -29,6 +29,12 @@ def main() -> None:
 
     microbench.main()
 
+    print("# === round loop: lax.scan blocks vs host-driven rounds ===",
+          flush=True)
+    from benchmarks import roundloop
+
+    roundloop.main()
+
     print("# === paper Table 1 (reduced scale; see benchmarks/table1.py "
           "--full for the complete sweep) ===", flush=True)
     t0 = time.time()

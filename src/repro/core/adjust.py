@@ -41,6 +41,7 @@ class AdjustResult:
     priority: Permutation | jax.Array  # accepted permutation (static or index)
     num_evaluated: int               # how many candidates were built/tested
     backtracked: bool | jax.Array
+    weights: Optional[jax.Array] = None  # accepted candidate's p[K]
 
 
 def _candidate(
@@ -74,7 +75,10 @@ def adjust_round(
     quality = eval_fn(candidate)
     n_eval = 1
     if bool(quality >= prev_quality):
-        return AdjustResult(candidate, quality, current_priority, n_eval, False)
+        return AdjustResult(
+            candidate, quality, current_priority, n_eval, False,
+            weights=compute_weights(c, cfg, current_priority, mask),
+        )
 
     best_q, best_cand, best_perm = quality, candidate, current_priority
     for perm in perms:
@@ -84,11 +88,17 @@ def adjust_round(
         q = eval_fn(cand)
         n_eval += 1
         if bool(q >= prev_quality):
-            return AdjustResult(cand, q, perm, n_eval, True)
+            return AdjustResult(
+                cand, q, perm, n_eval, True,
+                weights=compute_weights(c, cfg, perm, mask),
+            )
         if bool(q > best_q):
             best_q, best_cand, best_perm = q, cand, perm
     # least-worst fallback (lines 22–25)
-    return AdjustResult(best_cand, best_q, best_perm, n_eval, True)
+    return AdjustResult(
+        best_cand, best_q, best_perm, n_eval, True,
+        weights=compute_weights(c, cfg, best_perm, mask),
+    )
 
 
 def adjust_round_vectorized(
@@ -145,5 +155,9 @@ def adjust_round_vectorized(
         quality=qualities[chosen],
         priority=chosen,
         num_evaluated=n,
-        backtracked=chosen != current_priority_idx,
+        # "did the search leave the happy path" — matches adjust_round,
+        # which reports True even when the least-worst fallback lands back
+        # on the current permutation
+        backtracked=cur_q < prev_quality,
+        weights=w_chosen,
     )

@@ -69,12 +69,23 @@ def compute_weights(
 ) -> jax.Array:
     """Criteria → normalized aggregation weights ``p[K]`` (Eq. 3).
 
-    ``mask`` zeroes out non-participating clients before normalization.
+    ``mask`` scales scores before normalization: 0 excludes a client
+    (network dropout / unavailability), values in (0, 1) down-weight it
+    (straggler contribution).  The degenerate all-zero-score fallback is
+    uniform over *participants only*, so a masked-out client never
+    receives weight; with no mask (or an all-ones mask) this reduces
+    exactly to :func:`operators.scores_to_weights`.
     """
     s = compute_scores(c, cfg, priority)
-    if mask is not None:
-        s = s * jnp.asarray(mask, s.dtype)
-    return operators.scores_to_weights(s)
+    if mask is None:
+        return operators.scores_to_weights(s)
+    m = jnp.asarray(mask, s.dtype)
+    s = s * m
+    z = jnp.sum(s)
+    participants = (m > 0).astype(s.dtype)
+    uniform = participants / jnp.maximum(jnp.sum(participants), 1.0)
+    eps = 1e-12
+    return jnp.where(z > eps, s / jnp.maximum(z, eps), uniform)
 
 
 def aggregate_models(

@@ -47,6 +47,7 @@ class ClientContext:
     expert_counts: Optional[jax.Array] = None    # [num_experts] routing histogram
     flops_per_sec: Optional[jax.Array] = None    # declared capability
     staleness: Optional[jax.Array] = None        # rounds since last sync
+    availability: Optional[jax.Array] = None     # expected participation [0,1]
 
 
 def dataset_size(ctx: ClientContext) -> jax.Array:
@@ -88,6 +89,16 @@ def staleness(ctx: ClientContext) -> jax.Array:
     return 1.0 / (1.0 + jnp.asarray(ctx.staleness, jnp.float32))
 
 
+def availability(ctx: ClientContext) -> jax.Array:
+    """Expected per-round participation (duty-cycle x upload survival).
+
+    Fed from a device-scenario fleet
+    (``repro.federated.scenarios.DeviceFleet.expected_availability``):
+    favors clients whose updates will actually keep arriving.
+    """
+    return jnp.asarray(ctx.availability, jnp.float32)
+
+
 CriterionFn = Callable[[ClientContext], jax.Array]
 
 _REGISTRY: Dict[str, CriterionFn] = {}
@@ -116,6 +127,7 @@ for _name, _fn in [
     ("load_balance", load_balance),
     ("compute_capability", compute_capability),
     ("staleness", staleness),
+    ("availability", availability),
 ]:
     register_criterion(_name, _fn)
 

@@ -6,13 +6,20 @@ The simulation engine consumes *dense padded* client shards (see
 * a client subset (``sampler.sample_clients``),
 * per-client minibatch streams for E local epochs of batch size B.
 
-Everything is index-based and jit-friendly: we precompute permutation
-indices with numpy (host side, per round) and gather on device.
+Everything is index-based and jit-friendly.  Two plan builders:
+
+* :func:`local_batch_indices` / :func:`round_batch_indices` — host-side
+  numpy shuffled-epoch plans (legacy host-driven loop),
+* :func:`device_batch_plans` — pure ``jax.random`` plans built *inside*
+  the jitted round step (uniform-with-replacement over each client's
+  valid rows), used by the on-device ``lax.scan`` round loop.
 """
 from __future__ import annotations
 
 from typing import Iterator, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -62,3 +69,23 @@ def round_batch_indices(
         reps = int(np.ceil(steps / idx.shape[0]))
         plans[i] = np.tile(idx, (reps, 1))[:steps]
     return plans
+
+
+def device_batch_plans(
+    key: jax.Array, counts: jax.Array, steps: int, batch_size: int,
+) -> jax.Array:
+    """In-jit batch plans ``[S, steps, batch_size]`` for selected clients.
+
+    ``counts[S]`` may be traced (gathered per-round from the selection);
+    indices are drawn uniformly with replacement over each client's valid
+    rows — the jit-friendly counterpart of the host shuffled-epoch plans,
+    identical in expectation over an epoch.
+    """
+    keys = jax.random.split(key, counts.shape[0])
+
+    def one(k, n):
+        return jax.random.randint(
+            k, (steps, batch_size), 0, jnp.maximum(n, 1), dtype=jnp.int32
+        )
+
+    return jax.vmap(one)(keys, counts)

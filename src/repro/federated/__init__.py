@@ -1,4 +1,21 @@
-from repro.federated.sampler import sample_clients
+from repro.federated.sampler import sample_clients, sample_clients_jax
+from repro.federated.scenarios import (
+    PRESETS,
+    DeviceFleet,
+    ScenarioConfig,
+    make_fleet,
+    participation,
+)
 from repro.federated.simulation import FederatedSimulation, FedSimConfig
 
-__all__ = ["FederatedSimulation", "FedSimConfig", "sample_clients"]
+__all__ = [
+    "DeviceFleet",
+    "FederatedSimulation",
+    "FedSimConfig",
+    "PRESETS",
+    "ScenarioConfig",
+    "make_fleet",
+    "participation",
+    "sample_clients",
+    "sample_clients_jax",
+]

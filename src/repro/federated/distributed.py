@@ -21,7 +21,7 @@ The production mapping of the paper's protocol onto the TPU mesh:
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,9 +48,13 @@ def _batch_in_specs(batch: Dict[str, jax.Array], caxes) -> Dict[str, P]:
 
 def _client_criteria(
     batch: Dict[str, jax.Array], grads: PyTree, lr: float, vocab_size: int,
-    caxes: Tuple[str, ...],
+    caxes: Tuple[str, ...], part: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Per-client normalized criteria vector [m] (sums to 1 over clients)."""
+    """Per-client normalized criteria vector [m] (sums to 1 over clients).
+
+    ``part`` is this client's scalar participation (scenario mask): 0
+    excludes it from the round's normalizing constant entirely.
+    """
     labels = batch["labels"]
     mask = batch.get("loss_mask")
     if mask is None:
@@ -63,6 +67,8 @@ def _client_criteria(
     md_raw = 1.0 / jnp.sqrt(lr * gnorm + 1.0)
 
     raw = jnp.stack([ds_raw, ld_raw, md_raw])        # [m]
+    if part is not None:
+        raw = raw * part
     total = jax.lax.psum(raw, caxes)
     return raw / jnp.maximum(total, 1e-12)
 
@@ -109,6 +115,7 @@ def make_federated_train_step(
     priority: Tuple[int, ...] = (0, 1, 2),
     fedavg_baseline: bool = False,
     agg_mode: str = "allreduce",
+    with_participation: bool = False,
 ) -> Callable:
     """Jitted federated train step: ``step(params, batch) -> (params, stats)``.
 
@@ -117,18 +124,32 @@ def make_federated_train_step(
     ``agg_mode``: "allreduce" (f32 psum, paper-faithful baseline) or
     "rs_ag_bf16" (f32 reduce-scatter + bf16 all-gather — beyond-paper
     collective optimization, §Perf).
+    ``with_participation=True`` changes the signature to
+    ``step(params, batch, participation)`` where ``participation`` is the
+    ``[K]`` per-client scenario mask/contribution
+    (``repro.federated.scenarios.participation``): 0 excludes a client
+    from criteria normalization and the weighted psum, fractional values
+    down-weight stragglers; an all-dropped round degenerates to a no-op
+    update (all weights 0).
     """
     caxes = client_axes(mesh)
     K = num_clients(mesh)
     cfg = bundle.cfg
 
-    def per_client(params, batch):
+    def per_client(params, batch, part=None):
+        pm = None if part is None else part.reshape(())
         (loss, _), grads = jax.value_and_grad(
             lambda p: bundle.loss(p, batch), has_aux=True
         )(params)
-        c = _client_criteria(batch, grads, lr, cfg.vocab_size, caxes)
+        # criteria normalize over *participants* (binary mask); the
+        # fractional straggler contribution is applied once, to the score —
+        # same semantics as the single-host round loop (scenarios.py)
+        bin_pm = None if pm is None else (pm > 0).astype(jnp.float32)
+        c = _client_criteria(batch, grads, lr, cfg.vocab_size, caxes, bin_pm)
 
         s = c[0] if fedavg_baseline else prioritized_score(c, priority)
+        if pm is not None:
+            s = s * pm
         z = jax.lax.psum(s, caxes)
         p_k = s / jnp.maximum(z, 1e-12)
 
@@ -158,21 +179,34 @@ def make_federated_train_step(
         }
         return agg, stats
 
+    out_specs = (
+        P(),
+        {"loss": P(), "weight": P(caxes), "criteria": P(caxes, None)},
+    )
+
     def train_step(params, batch):
         agg, stats = jax.shard_map(
             per_client,
             mesh=mesh,
             in_specs=(P(), _batch_in_specs(batch, caxes)),
-            out_specs=(
-                P(),
-                {"loss": P(), "weight": P(caxes), "criteria": P(caxes, None)},
-            ),
+            out_specs=out_specs,
             axis_names=set(caxes),
             check_vma=False,
         )(params, batch)
         return _sgd(params, agg, lr), stats
 
-    return train_step
+    def train_step_part(params, batch, participation):
+        agg, stats = jax.shard_map(
+            per_client,
+            mesh=mesh,
+            in_specs=(P(), _batch_in_specs(batch, caxes), P(caxes)),
+            out_specs=out_specs,
+            axis_names=set(caxes),
+            check_vma=False,
+        )(params, batch, participation)
+        return _sgd(params, agg, lr), stats
+
+    return train_step_part if with_participation else train_step
 
 
 def make_federated_adjust_step(
@@ -242,7 +276,7 @@ def make_federated_adjust_step(
             "loss": mean_loss,
             "quality": qualities[chosen],
             "priority_idx": chosen,
-            "backtracked": chosen != priority_idx,
+            "backtracked": cur_q < prev_quality,
         }
 
     return adjust_step

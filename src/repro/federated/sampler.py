@@ -1,12 +1,18 @@
 """Client selection for each round of communication.
 
-The paper uses uniform sampling of a fixed fraction (10%).  We also ship a
-capability-aware sampler (devices declare FLOP/s; selection probability is
-proportional) as a beyond-paper extension consistent with its
-device-awareness theme.
+The paper uses uniform sampling of a fixed fraction (10%).  Two samplers:
+
+* :func:`sample_clients` — host-side numpy (legacy host-driven loop),
+* :func:`sample_clients_jax` — pure ``jax.random``, safe inside jit /
+  ``lax.scan``; the on-device round loop uses this one.  Weighted
+  selection (capability/availability-aware, a beyond-paper extension in
+  line with the device-awareness theme) uses the Gumbel-top-k trick for
+  without-replacement sampling.
 """
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -14,10 +20,33 @@ def sample_clients(
     num_clients: int, fraction: float, rng: np.random.Generator,
     weights: np.ndarray | None = None,
 ) -> np.ndarray:
-    """Sample ``ceil(fraction * num_clients)`` distinct clients."""
-    n = max(1, int(round(fraction * num_clients)))
+    """Sample ``num_selected(...)`` distinct clients."""
+    n = num_selected(num_clients, fraction)
     p = None
     if weights is not None:
         w = np.asarray(weights, np.float64)
         p = w / w.sum()
     return np.sort(rng.choice(num_clients, size=n, replace=False, p=p))
+
+
+def num_selected(num_clients: int, fraction: float) -> int:
+    """Round-size shared by both samplers: ``max(1, round(f * K))``."""
+    return max(1, int(round(fraction * num_clients)))
+
+
+def sample_clients_jax(
+    key: jax.Array, num_clients: int, n: int,
+    weights: jax.Array | None = None,
+) -> jax.Array:
+    """Sample ``n`` distinct clients on device (sorted ``[n]`` int32).
+
+    Uniform selection is a truncated ``jax.random.permutation``; weighted
+    selection perturbs log-weights with Gumbel noise and takes the top-k
+    (equivalent to without-replacement sampling proportional to weights).
+    """
+    if weights is None:
+        return jnp.sort(jax.random.permutation(key, num_clients)[:n])
+    g = jax.random.gumbel(key, (num_clients,))
+    scores = jnp.log(jnp.maximum(jnp.asarray(weights, jnp.float32), 1e-12)) + g
+    _, idx = jax.lax.top_k(scores, n)
+    return jnp.sort(idx.astype(jnp.int32))

@@ -1,0 +1,198 @@
+"""Device-heterogeneity scenario engine (beyond-paper device-awareness).
+
+The paper's protocol weights clients by *statistical* criteria (Ds/Ld/Md)
+but treats every device as identical: always on, always finishing its
+local work, never dropping its upload.  Real fleets are nothing like that
+— FedAvg (McMahan et al., 2017) explicitly leaves device heterogeneity
+open, and the prioritized multi-criteria follow-up motivates modelling it.
+This module supplies that missing dimension:
+
+* a :class:`DeviceFleet` — per-client device profiles (compute tier,
+  battery/availability schedule, network dropout probability, straggler
+  slowdown) held as device-resident arrays so participation can be drawn
+  *inside* a jitted round step,
+* named presets ("uniform", "mobile-heavy", "flaky-network",
+  "tiered-fleet") sampled deterministically from a seed,
+* :func:`participation` — per-round participation mask + contribution
+  scale, composable with the ``mask`` arguments of
+  :func:`repro.core.aggregate.compute_weights`,
+  :func:`repro.core.criteria.normalize_criteria` and
+  :func:`repro.core.adjust.adjust_round_vectorized`.
+
+Semantics per round, for each *selected* client ``k``:
+
+1. availability — a deterministic periodic duty-cycle schedule (think
+   battery/charging windows): on iff
+   ``(round + phase_k) mod period < duty_k * period``;
+2. network dropout — Bernoulli(``dropout_prob_k``) per round, drawn from
+   a dedicated ``jax.random`` stream (independent of sampling/batching
+   streams so the "uniform" preset reproduces mask-free runs bit-for-bit);
+3. straggling — slow devices finish only part of their local work within
+   the round deadline; their surviving update is down-weighted by
+   ``1 / slowdown_k``.
+
+The round mask is ``avail * (1 - drop)`` in {0, 1}; the *contribution*
+scale is ``mask / slowdown`` in [0, 1].  Aggregation uses the
+contribution scale (drops excluded, stragglers down-weighted); criteria
+normalization uses the binary mask (drops excluded from the round's
+normalizing constant).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+#: tier index -> straggler slowdown multiplier (local work per wall-clock).
+TIER_SLOWDOWN = (1.0, 2.0, 4.0)
+
+
+@dataclass(frozen=True)
+class ScenarioConfig:
+    """Named preset plus knobs; ``preset="uniform"`` is the identity fleet."""
+
+    preset: str = "uniform"
+    period: int = 24               # availability schedule period (rounds)
+    seed: int = 0                  # fleet sampling seed (independent of sim seed)
+    bias_sampling: bool = False    # weight client *selection* by availability
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class DeviceFleet:
+    """Per-client device profiles as device-resident arrays.
+
+    * ``tier``        ``[K]`` int32 — compute tier (0 = fastest)
+    * ``slowdown``    ``[K]`` float — straggler factor (>= 1)
+    * ``dropout_prob````[K]`` float in [0, 1] — per-round upload loss
+    * ``duty_cycle``  ``[K]`` float in (0, 1] — fraction of the period on
+    * ``phase``       ``[K]`` int32 — offset into the availability period
+    """
+
+    tier: jax.Array
+    slowdown: jax.Array
+    dropout_prob: jax.Array
+    duty_cycle: jax.Array
+    phase: jax.Array
+    period: int = 24
+
+    def tree_flatten(self):
+        children = (self.tier, self.slowdown, self.dropout_prob,
+                    self.duty_cycle, self.phase)
+        return children, self.period
+
+    @classmethod
+    def tree_unflatten(cls, period, children):
+        return cls(*children, period=period)
+
+    @property
+    def num_clients(self) -> int:
+        return int(self.tier.shape[0])
+
+    def expected_availability(self) -> jax.Array:
+        """[K] expected per-round participation — duty * (1 - dropout).
+
+        Usable as a selection bias for capability-aware sampling
+        (``sample_clients_jax(weights=...)``).
+        """
+        return self.duty_cycle * (1.0 - self.dropout_prob)
+
+
+def _uniform(key, n: int, period: int) -> DeviceFleet:
+    return DeviceFleet(
+        tier=jnp.zeros((n,), jnp.int32),
+        slowdown=jnp.ones((n,), jnp.float32),
+        dropout_prob=jnp.zeros((n,), jnp.float32),
+        duty_cycle=jnp.ones((n,), jnp.float32),
+        phase=jnp.zeros((n,), jnp.int32),
+        period=period,
+    )
+
+
+def _mobile_heavy(key, n: int, period: int) -> DeviceFleet:
+    """80% phones: tight duty cycles, mild dropout, 2-4x slowdowns."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    is_phone = jax.random.bernoulli(k1, 0.8, (n,))
+    tier = jnp.where(
+        is_phone, 1 + jax.random.bernoulli(k2, 0.5, (n,)).astype(jnp.int32), 0
+    )
+    return DeviceFleet(
+        tier=tier,
+        slowdown=jnp.asarray(TIER_SLOWDOWN, jnp.float32)[tier],
+        dropout_prob=jnp.where(is_phone, 0.1, 0.01).astype(jnp.float32),
+        duty_cycle=jnp.where(
+            is_phone, jax.random.uniform(k3, (n,), minval=0.3, maxval=0.7), 1.0
+        ).astype(jnp.float32),
+        phase=jax.random.randint(k4, (n,), 0, period),
+        period=period,
+    )
+
+
+def _flaky_network(key, n: int, period: int) -> DeviceFleet:
+    """Uniform compute, always on, but heavy-tailed per-round upload loss."""
+    base = _uniform(key, n, period)
+    # Beta(1, 3): most clients near 0, a tail reaching ~0.8 dropout.
+    drop = jax.random.beta(key, 1.0, 3.0, (n,)) * 0.8
+    return DeviceFleet(
+        tier=base.tier, slowdown=base.slowdown,
+        dropout_prob=drop.astype(jnp.float32),
+        duty_cycle=base.duty_cycle, phase=base.phase, period=period,
+    )
+
+
+def _tiered_fleet(key, n: int, period: int) -> DeviceFleet:
+    """Three compute tiers (50/30/20), reliability tracking the tier."""
+    k1, k2 = jax.random.split(key)
+    u = jax.random.uniform(k1, (n,))
+    tier = (u > 0.5).astype(jnp.int32) + (u > 0.8).astype(jnp.int32)
+    return DeviceFleet(
+        tier=tier,
+        slowdown=jnp.asarray(TIER_SLOWDOWN, jnp.float32)[tier],
+        dropout_prob=(0.02 * (1 + tier)).astype(jnp.float32),
+        duty_cycle=(1.0 - 0.2 * tier).astype(jnp.float32),
+        phase=jax.random.randint(k2, (n,), 0, period),
+        period=period,
+    )
+
+
+PRESETS: Dict[str, object] = {
+    "uniform": _uniform,
+    "mobile-heavy": _mobile_heavy,
+    "flaky-network": _flaky_network,
+    "tiered-fleet": _tiered_fleet,
+}
+
+
+def make_fleet(cfg: ScenarioConfig, num_clients: int) -> DeviceFleet:
+    """Sample a :class:`DeviceFleet` for ``cfg.preset`` deterministically."""
+    if cfg.preset not in PRESETS:
+        raise KeyError(
+            f"unknown scenario preset {cfg.preset!r}; available: "
+            f"{sorted(PRESETS)}"
+        )
+    key = jax.random.key(cfg.seed)
+    return PRESETS[cfg.preset](key, num_clients, cfg.period)
+
+
+def participation(
+    fleet: DeviceFleet,
+    sel: jax.Array,
+    round_idx: jax.Array,
+    key: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-round ``(mask, contribution)`` for the selected clients ``sel``.
+
+    ``mask[S]`` is binary participation (available and upload survived);
+    ``contribution[S] = mask / slowdown`` additionally down-weights
+    stragglers.  Pure jnp — safe inside jit / ``lax.scan``.
+    """
+    duty = fleet.duty_cycle[sel]
+    phase = fleet.phase[sel]
+    pos = jnp.mod(round_idx + phase, fleet.period).astype(jnp.float32)
+    avail = (pos < duty * fleet.period).astype(jnp.float32)
+    drop = jax.random.bernoulli(key, fleet.dropout_prob[sel]).astype(jnp.float32)
+    mask = avail * (1.0 - drop)
+    contribution = mask / fleet.slowdown[sel]
+    return mask, contribution

@@ -8,17 +8,29 @@ Implements the experimental protocol of §3 end-to-end on one host:
   selected clients at once via ``vmap(lax.scan(...))``,
 * criteria measurement (Ds / Ld / Md, normalized across participants),
 * multi-criteria aggregation with any registered operator,
-* optional Algorithm-1 online priority adjustment with backtracking,
-* LEAF-style evaluation: each round the global model is tested on every
-  client's local test set; we track the fraction of devices above the
-  target accuracy and the size-weighted global accuracy.
+* optional Algorithm-1 online priority adjustment (the vectorized variant:
+  every permutation candidate built and scored inside the round program),
+* device-heterogeneity scenarios (``repro.federated.scenarios``): per-round
+  participation masks exclude dropped/unavailable clients and down-weight
+  stragglers through the ``mask`` arguments of ``normalize_criteria`` /
+  ``compute_weights`` / ``adjust_round_vectorized``,
+* LEAF-style evaluation: each eval point the global model is tested on
+  every client's local test set; we track the fraction of devices above
+  the target accuracy and the size-weighted global accuracy.
+
+The round loop is **on-device**: all randomness comes from ``jax.random``
+keys folded per round, client sampling and batch-plan construction happen
+inside the jitted round step, and ``eval_every`` consecutive rounds are
+driven by one ``jax.lax.scan`` so a whole block lowers to a single XLA
+program (eval/metrics hoisted to block boundaries).  ``use_scan=False``
+falls back to a host-driven per-round loop (same round body, same
+trajectory) — kept for A/B benchmarking of the dispatch overhead.
 
 The engine is model-agnostic: it takes ``loss_fn(params, x, y)`` and
 ``acc_fn(params, x, y, mask)`` plus initial params.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Callable, Dict, List, Optional, Tuple
@@ -29,15 +41,21 @@ import numpy as np
 
 from repro.core import (
     AggregationConfig,
-    adjust_round,
+    adjust_round_vectorized,
     aggregate_models,
     compute_weights,
     normalize_criteria,
 )
 from repro.core.operators import all_permutations
-from repro.data.pipeline import round_batch_indices
+from repro.data.pipeline import device_batch_plans
 from repro.data.synthetic import NUM_CLASSES, FederatedDataset
-from repro.federated.sampler import sample_clients
+from repro.federated.sampler import num_selected, sample_clients_jax
+from repro.federated.scenarios import (
+    DeviceFleet,
+    ScenarioConfig,
+    make_fleet,
+    participation,
+)
 from repro.optim.optimizers import sgd
 from repro.utils.pytree import PyTree, tree_sq_norm
 
@@ -51,8 +69,10 @@ class FedSimConfig:
     max_rounds: int = 1000         # paper cap
     aggregation: AggregationConfig = field(default_factory=AggregationConfig)
     online_adjust: bool = False    # study C switch
-    eval_every: int = 1
+    eval_every: int = 1            # also the lax.scan round-block size
     seed: int = 0
+    scenario: Optional[ScenarioConfig] = None  # device-heterogeneity preset
+    use_scan: bool = True          # False: host-driven per-round dispatch
 
 
 @dataclass
@@ -64,6 +84,7 @@ class RoundMetrics:
     backtracked: bool
     num_evaluated: int
     weights_entropy: float
+    participants: int              # clients surviving the scenario mask
 
 
 @dataclass
@@ -72,28 +93,6 @@ class SimResult:
     final_params: PyTree
     rounds_to_target: Dict[Tuple[float, float], Optional[int]]
     # (target_acc, frac_devices) -> first round achieving it (None if never)
-
-
-def _local_training_fn(loss_fn, lr: float):
-    """Build the vmapped multi-client local-SGD function."""
-
-    def one_client(global_params, images, labels, plan):
-        opt = sgd(lr)
-        opt_state = opt.init(global_params)
-
-        def step(carry, idx):
-            params, opt_state = carry
-            xb = jnp.take(images, idx, axis=0)
-            yb = jnp.take(labels, idx, axis=0)
-            grads = jax.grad(loss_fn)(params, xb, yb)
-            updates, opt_state = opt.update(grads, opt_state, params)
-            params = jax.tree.map(lambda p, u: p + u, params, updates)
-            return (params, opt_state), None
-
-        (params, _), _ = jax.lax.scan(step, (global_params, opt_state), plan)
-        return params
-
-    return jax.jit(jax.vmap(one_client, in_axes=(None, 0, 0, 0)))
 
 
 def _label_diversity(labels: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
@@ -121,8 +120,13 @@ class FederatedSimulation:
         self.loss_fn = loss_fn
         self.acc_fn = acc_fn
         self.params = init_params
-        self.rng = np.random.default_rng(config.seed)
-        self._local_train = _local_training_fn(loss_fn, config.lr)
+        self.fleet: Optional[DeviceFleet] = (
+            make_fleet(config.scenario, data.num_clients)
+            if config.scenario is not None else None
+        )
+        self._base_key = jax.random.key(config.seed)
+        self._perms = all_permutations(config.aggregation.num_criteria())
+        self._prio_init = self._perms.index(tuple(config.aggregation.priority))
 
         # device-resident copies of the client shards
         self.images = jnp.asarray(data.images)
@@ -136,29 +140,31 @@ class FederatedSimulation:
         self._t_mask = (jnp.arange(max_t)[None, :]
                         < self.t_counts[:, None]).astype(jnp.float32)
 
-        @jax.jit
-        def eval_all(params):
-            accs = jax.vmap(lambda xi, yi, mi: acc_fn(params, xi, yi, mi))(
-                self.t_images, self.t_labels, self._t_mask
-            )
-            w = self.t_counts.astype(jnp.float32)
-            global_acc = jnp.sum(accs * w) / jnp.sum(w)
-            return accs, global_acc
+        # Fixed per-round shapes -> every jitted program compiles once.
+        self._num_sel = num_selected(data.num_clients, config.fraction)
+        self._fixed_steps = max(
+            1, int(data.counts.max()) // config.batch_size
+        ) * config.local_epochs
 
-        self._eval_all = eval_all
-
-        @jax.jit
-        def divergence_raw(stacked, global_params):
-            def phi(client_params):
-                diff = jax.tree.map(jnp.subtract, global_params, client_params)
-                return 1.0 / jnp.sqrt(jnp.sqrt(tree_sq_norm(diff)) + 1.0)
-            return jax.vmap(phi)(stacked)
-
-        self._divergence_raw = divergence_raw
+        self._round_step = self._build_round_step()
+        self._run_block = jax.jit(self._build_run_block())
+        self._run_one = jax.jit(self._round_step)
+        self._eval_all = jax.jit(self._eval_global)
 
     # ------------------------------------------------------------------
-    def _measure_criteria(self, stacked: PyTree, sel: np.ndarray) -> jnp.ndarray:
-        """[S, m] normalized criteria matrix for the round's participants."""
+    def _eval_global(self, params):
+        """Per-client test accuracies [K] + size-weighted global accuracy."""
+        accs = jax.vmap(lambda xi, yi, mi: self.acc_fn(params, xi, yi, mi))(
+            self.t_images, self.t_labels, self._t_mask
+        )
+        w = self.t_counts.astype(jnp.float32)
+        return accs, jnp.sum(accs * w) / jnp.sum(w)
+
+    def _measure_criteria(
+        self, stacked: PyTree, sel: jax.Array, params: PyTree,
+        mask: jax.Array,
+    ) -> jax.Array:
+        """[S, m] criteria matrix, normalized over the round's participants."""
         cols = []
         for name in self.cfg.aggregation.criteria:
             key = {"Ds": "dataset_size", "Ld": "label_diversity",
@@ -168,11 +174,122 @@ class FederatedSimulation:
             elif key == "label_diversity":
                 raw = _label_diversity(self.labels[sel], self.counts[sel])
             elif key == "model_divergence":
-                raw = self._divergence_raw(stacked, self.params)
+                def phi(client_params):
+                    diff = jax.tree.map(jnp.subtract, params, client_params)
+                    return 1.0 / jnp.sqrt(jnp.sqrt(tree_sq_norm(diff)) + 1.0)
+                raw = jax.vmap(phi)(stacked)
             else:
                 raise KeyError(f"simulation does not measure criterion {name!r}")
-            cols.append(normalize_criteria(raw))
+            cols.append(normalize_criteria(raw, mask))
         return jnp.stack(cols, axis=1)
+
+    # ------------------------------------------------------------------
+    def _build_round_step(self):
+        """Pure round body ``(carry, round_idx) -> (carry, ys)``.
+
+        Carry is ``(params, prev_quality, priority_idx)``; everything —
+        sampling, batch plans, local SGD, criteria, scenario masks,
+        aggregation, optional Algorithm 1 — happens in one traced program.
+        """
+        cfg = self.cfg
+        fleet = self.fleet
+        S = self._num_sel
+        opt = sgd(cfg.lr)
+        loss_fn = self.loss_fn
+        sel_weights = (
+            fleet.expected_availability()
+            if (fleet is not None and cfg.scenario.bias_sampling) else None
+        )
+
+        def one_client(global_params, images, labels, plan):
+            opt_state = opt.init(global_params)
+
+            def step(carry, idx):
+                params, opt_state = carry
+                xb = jnp.take(images, idx, axis=0)
+                yb = jnp.take(labels, idx, axis=0)
+                grads = jax.grad(loss_fn)(params, xb, yb)
+                updates, opt_state = opt.update(grads, opt_state, params)
+                params = jax.tree.map(lambda p, u: p + u, params, updates)
+                return (params, opt_state), None
+
+            (params, _), _ = jax.lax.scan(step, (global_params, opt_state), plan)
+            return params
+
+        local_train = jax.vmap(one_client, in_axes=(None, 0, 0, 0))
+
+        def round_step(carry, rnd):
+            params, prev_q, prio_idx = carry
+            key = jax.random.fold_in(self._base_key, rnd)
+            k_sel, k_batch, k_scen = jax.random.split(key, 3)
+
+            sel = sample_clients_jax(k_sel, self.data.num_clients, S,
+                                     sel_weights)
+            plans = device_batch_plans(k_batch, self.counts[sel],
+                                       self._fixed_steps, cfg.batch_size)
+            stacked = local_train(params, self.images[sel], self.labels[sel],
+                                  plans)
+
+            if fleet is not None:
+                mask, contrib = participation(fleet, sel, rnd, k_scen)
+            else:
+                mask = contrib = jnp.ones((S,), jnp.float32)
+
+            c = self._measure_criteria(stacked, sel, params, mask)
+
+            if cfg.online_adjust:
+                res = adjust_round_vectorized(
+                    c, stacked, cfg.aggregation, prio_idx, prev_q,
+                    eval_fn=lambda cand: self._eval_global(cand)[1],
+                    mask=contrib,
+                )
+                new_params, p = res.global_params, res.weights
+                new_q = res.quality
+                new_prio = res.priority.astype(jnp.int32)
+                backtracked = res.backtracked
+                n_eval = jnp.asarray(res.num_evaluated, jnp.int32)
+            else:
+                p = compute_weights(c, cfg.aggregation,
+                                    tuple(cfg.aggregation.priority),
+                                    mask=contrib)
+                new_params = aggregate_models(stacked, p)
+                new_q, new_prio = prev_q, prio_idx
+                backtracked = jnp.asarray(False)
+                n_eval = jnp.asarray(1, jnp.int32)
+
+            # If every selected client dropped out, the round is a no-op:
+            # keep the previous global model and adjustment state.
+            alive = jnp.sum(contrib) > 0
+            new_params = jax.tree.map(
+                lambda a, b: jnp.where(alive, a, b), new_params, params
+            )
+            new_q = jnp.where(alive, new_q, prev_q)
+            new_prio = jnp.where(alive, new_prio, prio_idx)
+            backtracked = jnp.where(alive, backtracked, False)
+
+            ent = -jnp.sum(p * jnp.log(jnp.maximum(p, 1e-12)))
+            ys = {
+                "entropy": ent,
+                "priority_idx": new_prio,
+                "backtracked": backtracked,
+                "num_evaluated": n_eval,
+                "participants": jnp.sum(mask),
+            }
+            return (new_params, new_q, new_prio), ys
+
+        return round_step
+
+    def _build_run_block(self):
+        """``eval_every`` rounds as one lax.scan + one boundary eval."""
+
+        def run_block(params, prev_q, prio_idx, round_ids):
+            (params, prev_q, prio_idx), ys = jax.lax.scan(
+                self._round_step, (params, prev_q, prio_idx), round_ids
+            )
+            accs, global_acc = self._eval_global(params)
+            return params, prev_q, prio_idx, ys, accs, global_acc
+
+        return run_block
 
     # ------------------------------------------------------------------
     def run(
@@ -183,76 +300,59 @@ class FederatedSimulation:
         verbose: bool = True,
     ) -> SimResult:
         cfg = self.cfg
-        perms = all_permutations(cfg.aggregation.num_criteria())
-        priority = tuple(cfg.aggregation.priority)
-        prev_acc = 0.0
+        block = max(1, cfg.eval_every)
         metrics: List[RoundMetrics] = []
         rounds_to: Dict[Tuple[float, float], Optional[int]] = {
             (t, f): None for t in targets for f in device_fracs
         }
 
-        # Fixed local-step count across rounds -> one compilation of the
-        # vmapped trainer for the whole run.
-        fixed_steps = max(
-            1, int(self.data.counts.max()) // cfg.batch_size
-        ) * cfg.local_epochs
+        params = self.params
+        prev_q = jnp.asarray(0.0, jnp.float32)
+        prio_idx = jnp.asarray(self._prio_init, jnp.int32)
 
-        for rnd in range(1, cfg.max_rounds + 1):
-            sel = sample_clients(self.data.num_clients, cfg.fraction, self.rng)
-            plans = round_batch_indices(
-                self.data.counts, sel, cfg.batch_size, cfg.local_epochs,
-                self.rng, fixed_steps=fixed_steps,
-            )
-            stacked = self._local_train(
-                self.params, self.images[sel], self.labels[sel],
-                jnp.asarray(plans),
-            )
-            c = self._measure_criteria(stacked, sel)
-
-            backtracked, n_eval = False, 1
-            if cfg.online_adjust:
-                res = adjust_round(
-                    c, stacked, cfg.aggregation, priority, prev_acc,
-                    eval_fn=lambda cand: self._eval_all(cand)[1],
+        rnd = 0
+        while rnd < cfg.max_rounds:
+            n = min(block, cfg.max_rounds - rnd)
+            round_ids = jnp.arange(rnd + 1, rnd + n + 1, dtype=jnp.int32)
+            if cfg.use_scan:
+                params, prev_q, prio_idx, ys, accs, global_acc = (
+                    self._run_block(params, prev_q, prio_idx, round_ids)
                 )
-                self.params = res.global_params
-                priority = tuple(res.priority)
-                backtracked = bool(res.backtracked)
-                n_eval = res.num_evaluated
-                prev_acc = float(res.quality)
-                p = compute_weights(c, cfg.aggregation, priority)
+                last = jax.tree.map(lambda a: a[-1], ys)
             else:
-                p = compute_weights(c, cfg.aggregation, priority)
-                self.params = aggregate_models(stacked, p)
-
-            if rnd % cfg.eval_every == 0:
-                accs, global_acc = self._eval_all(self.params)
-                if not cfg.online_adjust:
-                    prev_acc = float(global_acc)
-                accs = np.asarray(accs)
-                frac_above = {
-                    t: float(np.mean(accs >= t)) for t in targets
-                }
-                for t in targets:
-                    for f in device_fracs:
-                        if rounds_to[(t, f)] is None and frac_above[t] >= f:
-                            rounds_to[(t, f)] = rnd
-                ent = float(-jnp.sum(p * jnp.log(jnp.maximum(p, 1e-12))))
-                metrics.append(RoundMetrics(
-                    round=rnd, global_acc=float(global_acc),
-                    frac_above=frac_above, priority=priority,
-                    backtracked=backtracked, num_evaluated=n_eval,
-                    weights_entropy=ent,
-                ))
-                if verbose and rnd % log_every == 0:
-                    print(
-                        f"[round {rnd:4d}] acc={float(global_acc):.4f} "
-                        f"frac>= {targets[0]:.0%}: {frac_above[targets[0]]:.2f} "
-                        f"priority={priority} bt={backtracked}"
+                for rid in round_ids:
+                    (params, prev_q, prio_idx), last = self._run_one(
+                        (params, prev_q, prio_idx), rid
                     )
-                # early stop when the strictest goal is met
-                if all(v is not None for v in rounds_to.values()):
-                    break
+                accs, global_acc = self._eval_all(params)
+            rnd += n
 
-        return SimResult(metrics=metrics, final_params=self.params,
+            accs = np.asarray(accs)
+            frac_above = {t: float(np.mean(accs >= t)) for t in targets}
+            for t in targets:
+                for f in device_fracs:
+                    if rounds_to[(t, f)] is None and frac_above[t] >= f:
+                        rounds_to[(t, f)] = rnd
+            priority = self._perms[int(last["priority_idx"])]
+            backtracked = bool(last["backtracked"])
+            metrics.append(RoundMetrics(
+                round=rnd, global_acc=float(global_acc),
+                frac_above=frac_above, priority=priority,
+                backtracked=backtracked,
+                num_evaluated=int(last["num_evaluated"]),
+                weights_entropy=float(last["entropy"]),
+                participants=int(last["participants"]),
+            ))
+            if verbose and (rnd % log_every == 0 or rnd >= cfg.max_rounds):
+                print(
+                    f"[round {rnd:4d}] acc={float(global_acc):.4f} "
+                    f"frac>= {targets[0]:.0%}: {frac_above[targets[0]]:.2f} "
+                    f"priority={priority} bt={backtracked}"
+                )
+            # early stop when the strictest goal is met
+            if all(v is not None for v in rounds_to.values()):
+                break
+
+        self.params = params
+        return SimResult(metrics=metrics, final_params=params,
                          rounds_to_target=rounds_to)

@@ -1,0 +1,57 @@
+"""Small dense net on flattened SynthFEMNIST images.
+
+Companion to :mod:`repro.models.cnn` with the same ``loss``/``accuracy``
+contract.  The federated engine is model-agnostic, and ``vmap(scan(grad(
+conv)))`` is pathologically slow on XLA CPU (~30x the unvmapped conv
+gradient), so CPU-bound engine tests, benchmarks, and examples drive the
+engine with this MLP and leave the paper CNN to accelerator runs and
+slow-marked tests.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import IMAGE_SHAPE, NUM_CLASSES
+
+Params = Dict[str, jax.Array]
+
+_IN = IMAGE_SHAPE[0] * IMAGE_SHAPE[1]
+
+
+def init_mlp_params(rng: jax.Array, hidden: int = 64,
+                    dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(rng)
+    he = jax.nn.initializers.he_normal()
+    return {
+        "w1": he(k1, (_IN, hidden), dtype),
+        "b1": jnp.zeros((hidden,), dtype),
+        "w2": he(k2, (hidden, NUM_CLASSES), dtype),
+        "b2": jnp.zeros((NUM_CLASSES,), dtype),
+    }
+
+
+def mlp_apply(params: Params, images: jax.Array) -> jax.Array:
+    """``images [B, 28, 28]`` (or flat) → logits ``[B, 62]``."""
+    x = images.reshape(images.shape[0], -1)
+    x = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return x @ params["w2"] + params["b2"]
+
+
+def mlp_loss(params: Params, images: jax.Array,
+             labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(mlp_apply(params, images))
+    nll = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=1)
+    return jnp.mean(nll)
+
+
+def mlp_accuracy(params: Params, images: jax.Array, labels: jax.Array,
+                 mask: jax.Array | None = None) -> jax.Array:
+    correct = (jnp.argmax(mlp_apply(params, images), axis=-1) == labels)
+    correct = correct.astype(jnp.float32)
+    if mask is None:
+        return jnp.mean(correct)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(correct * m) / jnp.maximum(jnp.sum(m), 1.0)

@@ -1,0 +1,11 @@
+"""Re-exports for fast engine tests: the CPU-friendly MLP model.
+
+See :mod:`repro.models.mlp` for why the fast tier uses an MLP instead of
+the paper CNN (XLA CPU's vmapped conv gradient pathology).
+"""
+from repro.models.mlp import (  # noqa: F401
+    init_mlp_params,
+    mlp_accuracy,
+    mlp_apply,
+    mlp_loss,
+)

@@ -1,0 +1,118 @@
+"""Property-testing shim: real ``hypothesis`` when installed, else a tiny
+deterministic fallback with the same surface.
+
+Tier-1 must collect and *run* on a bare environment (no ``hypothesis`` in
+the container), so property tests import ``given``/``settings``/``st``
+from here.  The fallback implements just the subset this repo uses:
+
+* ``st.integers(lo, hi)``, ``st.floats(lo, hi, allow_nan=False)``,
+  ``st.lists(elem, min_size=, max_size=)``, plus ``.map`` / ``.flatmap``,
+* ``@given(*strategies)`` — draws ``max_examples`` examples from a
+  per-test deterministic RNG (seeded from the test name, so failures
+  reproduce) and runs the test once per example; the first example per
+  strategy is a boundary draw (min-size / low endpoint) to keep the
+  cheap edge cases hypothesis would have found,
+* ``@settings(max_examples=, deadline=)`` — only ``max_examples`` is
+  honoured; other kwargs are accepted and ignored.
+
+No shrinking — on failure the offending arguments are in the assertion
+report via pytest's normal introspection.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng, boundary: bool):
+            return self._draw(rng, boundary)
+
+        def map(self, fn):
+            return _Strategy(lambda rng, b: fn(self._draw(rng, b)))
+
+        def flatmap(self, fn):
+            def draw(rng, b):
+                return fn(self._draw(rng, b)).draw(rng, b)
+
+            return _Strategy(draw)
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            def draw(rng, boundary):
+                if boundary:
+                    return int(min_value)
+                return int(rng.integers(min_value, max_value + 1))
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, allow_nan=False,
+                   allow_infinity=False):
+            def draw(rng, boundary):
+                if boundary:
+                    return float(min_value)
+                return float(rng.uniform(min_value, max_value))
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng, boundary):
+                n = min_size if boundary else int(
+                    rng.integers(min_size, max_size + 1)
+                )
+                return [elements.draw(rng, boundary) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    st = _St()
+
+    # The fallback caps example counts: unlike hypothesis it has no example
+    # database or shrinking, and on a bare CPU environment every new array
+    # shape triggers a fresh XLA compile, so large counts only buy time.
+    _MAX_EXAMPLES_CAP = 12
+
+    def settings(max_examples: int = 25, **_ignored):
+        def deco(fn):
+            fn._prop_max_examples = min(max_examples, _MAX_EXAMPLES_CAP)
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            inner = fn
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_prop_max_examples", None) or getattr(
+                    inner, "_prop_max_examples", _MAX_EXAMPLES_CAP
+                )
+                seed = zlib.adler32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for i in range(n):
+                    drawn = [s.draw(rng, boundary=(i == 0)) for s in strategies]
+                    inner(*args, *drawn, **kwargs)
+
+            # hide the strategy-filled (trailing) parameters from pytest so
+            # it does not look for fixtures named after them
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())[: -len(strategies)]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            return wrapper
+
+        return deco

@@ -1,0 +1,135 @@
+"""Algorithm 1: sequential (lazy, host control flow) vs vectorized (one
+XLA program) implementations must agree branch-for-branch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AggregationConfig,
+    adjust_round,
+    adjust_round_vectorized,
+    aggregate_models,
+    compute_weights,
+)
+from repro.core.operators import all_permutations
+
+CFG = AggregationConfig()          # prioritized, 3 criteria
+PERMS = all_permutations(3)
+
+
+def _round(seed, k=5):
+    """A synthetic round: criteria matrix + stacked 'models' (vectors)."""
+    kc, km = jax.random.split(jax.random.key(seed))
+    c = jax.random.uniform(kc, (k, 3))
+    stacked = {"w": jax.random.normal(km, (k, 7))}
+    return c, stacked
+
+
+def _eval_fn(target):
+    """Deterministic quality: negative distance of params to a target."""
+    t = jnp.asarray(target, jnp.float32)
+
+    def eval_fn(params):
+        return -jnp.sum((params["w"] - t) ** 2)
+
+    return eval_fn
+
+
+def _run_both(c, stacked, prev_q, cur_perm, eval_fn, mask=None):
+    seq = adjust_round(c, stacked, CFG, cur_perm, prev_q, eval_fn, mask=mask)
+    vec = adjust_round_vectorized(
+        c, stacked, CFG, jnp.int32(PERMS.index(cur_perm)),
+        jnp.float32(prev_q), eval_fn, mask=mask,
+    )
+    return seq, vec
+
+
+def _assert_equivalent(seq, vec):
+    seq_perm = tuple(seq.priority)
+    vec_perm = PERMS[int(vec.priority)]
+    assert seq_perm == vec_perm
+    assert bool(seq.backtracked) == bool(vec.backtracked)
+    np.testing.assert_allclose(float(seq.quality), float(vec.quality),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(seq.global_params["w"]),
+                               np.asarray(vec.global_params["w"]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(seq.weights),
+                               np.asarray(vec.weights),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("seed", range(2))
+@pytest.mark.parametrize("cur_perm", [(0, 1, 2), (2, 0, 1)])
+def test_no_regression_keeps_priority(seed, cur_perm):
+    """prev_quality very low -> the current permutation is kept."""
+    c, stacked = _round(seed)
+    seq, vec = _run_both(c, stacked, -1e9, cur_perm, _eval_fn(0.0))
+    _assert_equivalent(seq, vec)
+    assert tuple(seq.priority) == cur_perm
+    assert not bool(seq.backtracked)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_backtracking_accepts_first_nonregressing(seed):
+    """prev_quality between the worst and best candidate quality -> the
+    search backtracks and both variants accept the same permutation."""
+    c, stacked = _round(seed)
+    eval_fn = _eval_fn(0.0)
+    qs = {p: float(eval_fn(aggregate_models(
+        stacked, compute_weights(c, CFG, p)))) for p in PERMS}
+    # an eval threshold that the current permutation fails but some other
+    # permutation may pass: midway between min and max candidate quality
+    lo, hi = min(qs.values()), max(qs.values())
+    if lo == hi:
+        pytest.skip("degenerate draw: all candidates identical")
+    prev_q = (lo + hi) / 2.0
+    cur_perm = min(qs, key=qs.get)     # start from the worst candidate
+    if qs[cur_perm] >= prev_q:
+        pytest.skip("worst candidate does not regress")
+    seq, vec = _run_both(c, stacked, prev_q, cur_perm, eval_fn)
+    _assert_equivalent(seq, vec)
+    assert bool(seq.backtracked)
+    # accepted candidate really is the first non-regressing in enumeration
+    # order, skipping the current permutation
+    expected = next(p for p in PERMS
+                    if p != cur_perm and qs[p] >= prev_q)
+    assert tuple(seq.priority) == expected
+
+
+@pytest.mark.parametrize("seed", range(2))
+@pytest.mark.parametrize("cur_perm", [(0, 1, 2), (1, 2, 0)])
+def test_least_worst_fallback(seed, cur_perm):
+    """prev_quality unreachably high -> every candidate regresses and both
+    variants fall back to the argmax-quality candidate."""
+    c, stacked = _round(seed)
+    seq, vec = _run_both(c, stacked, 1e9, cur_perm, _eval_fn(0.0))
+    _assert_equivalent(seq, vec)
+    assert bool(seq.backtracked)
+    assert seq.num_evaluated == len(PERMS)
+
+
+def test_equivalence_with_participation_mask():
+    c, stacked = _round(11)
+    mask = jnp.asarray([1.0, 0.0, 1.0, 0.25, 1.0])
+    for prev_q in (-1e9, 1e9):
+        seq, vec = _run_both(c, stacked, prev_q, (0, 1, 2),
+                             _eval_fn(0.0), mask=mask)
+        _assert_equivalent(seq, vec)
+        assert float(seq.weights[1]) == 0.0
+
+
+def test_vectorized_is_jittable():
+    c, stacked = _round(3)
+    eval_fn = _eval_fn(0.0)
+
+    @jax.jit
+    def step(c, stacked, idx, prev_q):
+        res = adjust_round_vectorized(c, stacked, CFG, idx, prev_q, eval_fn)
+        return res.global_params, res.priority, res.quality
+
+    params, prio, q = step(c, stacked, jnp.int32(0), jnp.float32(-1e9))
+    assert params["w"].shape == (7,)
+    assert int(prio) in range(len(PERMS))
+    assert np.isfinite(float(q))

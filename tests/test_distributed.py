@@ -1,5 +1,8 @@
 """Mode-B distributed federated step — runs in a subprocess with 8 forced
-host devices so the main test process keeps its single-device view."""
+host devices so the main test process keeps its single-device view.
+
+Slow tier: the subprocess compiles a reduced transformer on a 2x2x2 mesh
+(minutes on CPU) and needs a jax with ``jax.sharding.AxisType``."""
 import json
 import os
 import subprocess
@@ -7,6 +10,8 @@ import sys
 import textwrap
 
 import pytest
+
+pytestmark = pytest.mark.slow
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -100,6 +105,19 @@ _SCRIPT = textwrap.dedent("""
         results["adjust_fallback_is_argmax"] = bool(st2["backtracked"]) or \
             int(st2["priority_idx"]) == 2
 
+        # scenario participation: a masked-out client gets zero weight and
+        # the surviving weights renormalize over participants
+        step_pm = make_federated_train_step(mdl, mesh, lr=0.01,
+                                            priority=(2, 0, 1),
+                                            with_participation=True)
+        part = jnp.asarray([1.0, 1.0, 0.0, 1.0], jnp.float32)
+        _, st_pm = jax.jit(step_pm)(params, batch, part)
+        w_pm = np.asarray(st_pm["weight"])
+        results["participation_zeroes_dropped"] = bool(
+            abs(float(w_pm[2])) < 1e-7)
+        results["participation_renormalizes"] = bool(
+            abs(float(w_pm.sum()) - 1.0) < 1e-5)
+
         # rs_ag_bf16 aggregation == allreduce up to bf16 rounding
         step_rs = make_federated_train_step(mdl, mesh, lr=0.01,
                                             priority=(2, 0, 1),
@@ -172,6 +190,11 @@ def test_adjust_acceptance_rule(subproc_results):
 
 def test_rs_ag_bf16_aggregation_matches(subproc_results):
     assert subproc_results["rs_ag_close"]
+
+
+def test_participation_mask(subproc_results):
+    assert subproc_results["participation_zeroes_dropped"]
+    assert subproc_results["participation_renormalizes"]
 
 
 def test_moe_a2a_dispatch_matches_gather(subproc_results):

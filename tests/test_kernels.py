@@ -19,7 +19,10 @@ def _tol(dt):
 
 @pytest.mark.parametrize("K,N", [(2, 128), (4, 1000), (16, 5000), (37, 257),
                                  (64, 8192)])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [
+    jnp.float32,
+    pytest.param(jnp.bfloat16, marks=pytest.mark.slow),  # interpret-mode dup
+])
 def test_weighted_agg_sweep(K, N, dtype):
     x = jnp.asarray(RNG.normal(size=(K, N)), dtype)
     w = jnp.asarray(RNG.uniform(size=K), jnp.float32)
@@ -41,7 +44,10 @@ def test_weighted_agg_block_sizes(block_n):
 
 
 @pytest.mark.parametrize("K,N", [(2, 128), (8, 4097), (32, 1024)])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [
+    jnp.float32,
+    pytest.param(jnp.bfloat16, marks=pytest.mark.slow),  # interpret-mode dup
+])
 def test_divergence_sweep(K, N, dtype):
     x = jnp.asarray(RNG.normal(size=(K, N)), dtype)
     g = jnp.asarray(RNG.normal(size=N), dtype)
@@ -64,7 +70,10 @@ ATTN_CASES = [
 
 
 @pytest.mark.parametrize("case", ATTN_CASES)
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [
+    jnp.float32,
+    pytest.param(jnp.bfloat16, marks=pytest.mark.slow),  # interpret-mode dup
+])
 def test_flash_attention_sweep(case, dtype):
     B, Hq, Hkv, Sq, Skv, D, causal, window, qoff = case
     q = jnp.asarray(RNG.normal(size=(B, Hq, Sq, D)), dtype)
@@ -140,6 +149,7 @@ def test_attention_chunked_k_valid():
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_model_level_chunked_attention_equivalence():
     """attn_block config produces identical logits (train + prefill)."""
     from repro.configs.registry import ARCHS

@@ -1,13 +1,14 @@
-"""Unit + property tests for the multi-criteria aggregation operators."""
+"""Unit + property tests for the multi-criteria aggregation operators.
+
+Property tests run under real hypothesis when installed, else the
+deterministic fallback in ``tests/_propcheck.py`` (bare container)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+from _propcheck import given, settings, st
 from repro.core import operators as ops
-
-jax.config.update("jax_platform_name", "cpu")
 
 
 def crit_matrix(min_k=1, max_k=8, m=3):
@@ -76,6 +77,29 @@ class TestPrioritized:
         )
         assert np.all(np.isfinite(np.asarray(g)))
 
+    @given(crit_matrix(max_k=6))
+    @settings(max_examples=25, deadline=None)
+    def test_invariant_to_client_order(self, c):
+        """Scores are per-client: permuting the rows permutes the scores."""
+        order = np.argsort(-c.sum(1), kind="stable")  # any fixed shuffle
+        for perm in ops.all_permutations(c.shape[1]):
+            s = np.asarray(ops.prioritized_score(jnp.asarray(c), perm))
+            s_shuf = np.asarray(
+                ops.prioritized_score(jnp.asarray(c[order]), perm)
+            )
+            np.testing.assert_allclose(s_shuf, s[order], rtol=1e-6, atol=1e-7)
+
+    @given(crit_matrix(max_k=4), st.integers(0, 2), st.floats(0.0, 1.0))
+    @settings(max_examples=25, deadline=None)
+    def test_monotone_in_each_criterion(self, c, j, bump):
+        """Raising any single criterion never lowers any client's score."""
+        c_hi = c.copy()
+        c_hi[:, j] = np.minimum(1.0, c_hi[:, j] + bump)
+        for perm in ops.all_permutations(c.shape[1]):
+            lo = np.asarray(ops.prioritized_score(jnp.asarray(c), perm))
+            hi = np.asarray(ops.prioritized_score(jnp.asarray(c_hi), perm))
+            assert np.all(hi >= lo - 1e-5)
+
 
 class TestWeights:
     @given(st.lists(st.floats(0.0, 100.0, allow_nan=False), min_size=1, max_size=32))
@@ -88,6 +112,45 @@ class TestWeights:
     def test_degenerate_all_zero(self):
         w = np.asarray(ops.scores_to_weights(jnp.zeros(4)))
         np.testing.assert_allclose(w, 0.25, rtol=1e-6)
+
+    @given(st.integers(1, 32))
+    @settings(max_examples=20, deadline=None)
+    def test_all_zero_falls_back_to_uniform(self, k):
+        w = np.asarray(ops.scores_to_weights(jnp.zeros(k)))
+        np.testing.assert_allclose(w, 1.0 / k, rtol=1e-6)
+
+    @given(crit_matrix())
+    @settings(max_examples=30, deadline=None)
+    def test_prioritized_pipeline_weights_sum_to_one(self, c):
+        s = ops.prioritized_score(jnp.asarray(c), (0, 1, 2))
+        w = np.asarray(ops.scores_to_weights(s))
+        assert abs(w.sum() - 1.0) < 1e-5
+        assert np.all(w >= 0)
+
+
+class TestAveragingBounds:
+    """Every averaging operator maps [0,1]^m criteria to scores in [0,1]."""
+
+    @given(crit_matrix())
+    @settings(max_examples=30, deadline=None)
+    def test_weighted_average_in_unit_interval(self, c):
+        imp = jnp.asarray([3.0, 1.0, 2.0])
+        s = np.asarray(ops.weighted_average_score(jnp.asarray(c), imp))
+        assert np.all(s >= -1e-6) and np.all(s <= 1 + 1e-6)
+
+    @given(crit_matrix())
+    @settings(max_examples=30, deadline=None)
+    def test_owa_in_unit_interval(self, c):
+        w = ops.owa_quantifier_weights(c.shape[1], alpha=0.5)
+        s = np.asarray(ops.owa_score(jnp.asarray(c), w))
+        assert np.all(s >= -1e-6) and np.all(s <= 1 + 1e-6)
+
+    @given(crit_matrix(max_k=4))
+    @settings(max_examples=30, deadline=None)
+    def test_choquet_in_unit_interval(self, c):
+        mu = ops.lambda_fuzzy_measure([0.3, 0.3, 0.3], lam=0.5)
+        s = np.asarray(ops.choquet_score(jnp.asarray(c), mu))
+        assert np.all(s >= -1e-6) and np.all(s <= 1 + 1e-6)
 
 
 class TestOWA:
@@ -107,6 +170,14 @@ class TestOWA:
         s = np.asarray(ops.owa_score(jnp.asarray(c), w))
         assert np.all(s >= c.min(1) - 1e-5)
         assert np.all(s <= c.max(1) + 1e-5)
+
+    @given(crit_matrix())
+    @settings(max_examples=30, deadline=None)
+    def test_uniform_weights_equal_mean(self, c):
+        """OWA with uniform weights degenerates to the plain mean."""
+        m = c.shape[1]
+        s = np.asarray(ops.owa_score(jnp.asarray(c), jnp.ones(m) / m))
+        np.testing.assert_allclose(s, c.mean(1), rtol=1e-5, atol=1e-6)
 
 
 class TestChoquet:

@@ -1,0 +1,193 @@
+"""Device-heterogeneity scenario engine: presets, participation masks, and
+their composition with the aggregation mask arguments."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _helpers import init_mlp_params, mlp_accuracy, mlp_loss
+from repro.core import AggregationConfig, compute_weights, normalize_criteria
+from repro.data.synthetic import make_synth_femnist
+from repro.federated.scenarios import (
+    PRESETS,
+    DeviceFleet,
+    ScenarioConfig,
+    make_fleet,
+    participation,
+)
+from repro.federated.simulation import FederatedSimulation, FedSimConfig
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    return make_synth_femnist(num_clients=12, mean_samples=16, seed=5)
+
+
+@pytest.fixture(scope="module")
+def mlp_params():
+    return init_mlp_params(jax.random.key(1), hidden=32)
+
+
+def _run(data, params, **kw):
+    cfg = FedSimConfig(fraction=0.34, batch_size=8, local_epochs=1, lr=0.1,
+                       max_rounds=4,
+                       aggregation=AggregationConfig(priority=(2, 0, 1)), **kw)
+    sim = FederatedSimulation(data, params, mlp_loss, mlp_accuracy, cfg)
+    return sim.run(targets=(0.99,), device_fracs=(0.99,), verbose=False)
+
+
+class TestFleets:
+    @pytest.mark.parametrize("preset", sorted(PRESETS))
+    def test_presets_well_formed(self, preset):
+        fleet = make_fleet(ScenarioConfig(preset=preset), 64)
+        assert fleet.num_clients == 64
+        assert (np.asarray(fleet.slowdown) >= 1.0).all()
+        d = np.asarray(fleet.dropout_prob)
+        assert (d >= 0).all() and (d <= 1).all()
+        duty = np.asarray(fleet.duty_cycle)
+        assert (duty > 0).all() and (duty <= 1).all()
+
+    def test_unknown_preset_raises(self):
+        with pytest.raises(KeyError):
+            make_fleet(ScenarioConfig(preset="nope"), 4)
+
+    def test_fleet_sampling_deterministic(self):
+        a = make_fleet(ScenarioConfig(preset="tiered-fleet", seed=7), 32)
+        b = make_fleet(ScenarioConfig(preset="tiered-fleet", seed=7), 32)
+        np.testing.assert_array_equal(np.asarray(a.slowdown),
+                                      np.asarray(b.slowdown))
+
+    def test_availability_criterion_from_fleet(self):
+        """Fleet profiles feed the registered 'availability' criterion."""
+        from repro.core import ClientContext, measure_criteria
+
+        fleet = make_fleet(ScenarioConfig(preset="mobile-heavy", seed=2), 16)
+        ea = fleet.expected_availability()
+        vals = measure_criteria(
+            ("availability",), ClientContext(availability=ea[0])
+        )
+        np.testing.assert_allclose(float(vals[0]), float(ea[0]), rtol=1e-6)
+        assert (np.asarray(ea) >= 0).all() and (np.asarray(ea) <= 1).all()
+
+    def test_uniform_is_identity(self):
+        fleet = make_fleet(ScenarioConfig(), 8)
+        sel = jnp.arange(8)
+        for rnd in range(5):
+            mask, contrib = participation(fleet, sel, jnp.int32(rnd),
+                                          jax.random.key(rnd))
+            np.testing.assert_array_equal(np.asarray(mask), 1.0)
+            np.testing.assert_array_equal(np.asarray(contrib), 1.0)
+
+
+class TestParticipation:
+    def _fleet(self, dropout, slowdown, duty=1.0, n=6):
+        return DeviceFleet(
+            tier=jnp.zeros((n,), jnp.int32),
+            slowdown=jnp.full((n,), slowdown, jnp.float32),
+            dropout_prob=jnp.full((n,), dropout, jnp.float32),
+            duty_cycle=jnp.full((n,), duty, jnp.float32),
+            phase=jnp.zeros((n,), jnp.int32),
+            period=24,
+        )
+
+    def test_certain_dropout_never_contributes(self):
+        """A client with dropout probability 1.0 never gets weight."""
+        fleet = self._fleet(dropout=0.0, slowdown=1.0)
+        fleet.dropout_prob = fleet.dropout_prob.at[2].set(1.0)
+        sel = jnp.arange(6)
+        c = jax.random.uniform(jax.random.key(3), (6, 3))
+        cfg = AggregationConfig()
+        for rnd in range(8):
+            mask, contrib = participation(fleet, sel, jnp.int32(rnd),
+                                          jax.random.key(100 + rnd))
+            assert float(mask[2]) == 0.0
+            p = compute_weights(c, cfg, mask=contrib)
+            assert float(p[2]) == 0.0
+            # normalization over participants only
+            cn = normalize_criteria(c[:, 0], mask)
+            assert float(cn[2]) == 0.0
+
+    def test_all_dropped_round_gives_zero_weights(self):
+        fleet = self._fleet(dropout=1.0, slowdown=1.0)
+        sel = jnp.arange(6)
+        mask, contrib = participation(fleet, sel, jnp.int32(0),
+                                      jax.random.key(0))
+        assert float(jnp.sum(mask)) == 0.0
+        p = compute_weights(jnp.ones((6, 3)) * 0.5, AggregationConfig(),
+                            mask=contrib)
+        np.testing.assert_array_equal(np.asarray(p), 0.0)
+
+    def test_straggler_masks_compose_with_compute_weights(self):
+        """contribution = mask / slowdown down-weights stragglers."""
+        fleet = self._fleet(dropout=0.0, slowdown=1.0)
+        fleet.slowdown = fleet.slowdown.at[1].set(4.0)
+        sel = jnp.arange(6)
+        mask, contrib = participation(fleet, sel, jnp.int32(0),
+                                      jax.random.key(0))
+        np.testing.assert_array_equal(np.asarray(mask), 1.0)
+        assert float(contrib[1]) == 0.25
+
+        c = jnp.ones((6, 3)) * 0.5   # identical criteria for every client
+        p = np.asarray(compute_weights(c, AggregationConfig(), mask=contrib))
+        # straggler gets exactly 1/4 of a full-speed client's weight
+        np.testing.assert_allclose(p[1] / p[0], 0.25, rtol=1e-6)
+        np.testing.assert_allclose(p.sum(), 1.0, rtol=1e-6)
+
+    def test_duty_cycle_schedule(self):
+        fleet = self._fleet(dropout=0.0, slowdown=1.0, duty=0.5)
+        sel = jnp.arange(6)
+        on = [
+            float(participation(fleet, sel, jnp.int32(r),
+                                jax.random.key(0))[0][0])
+            for r in range(24)
+        ]
+        # half the period on, half off, contiguous from phase 0
+        assert on == [1.0] * 12 + [0.0] * 12
+
+
+class TestScenarioSimulation:
+    def test_uniform_preset_matches_maskfree_bitforbit(self, small_data,
+                                                       mlp_params):
+        """The 'uniform' preset is the identity: identical trajectory to a
+        scenario-free run at the same seed, bit for bit."""
+        res_none = _run(small_data, mlp_params)
+        res_uni = _run(small_data, mlp_params, scenario=ScenarioConfig())
+        a = [m.global_acc for m in res_none.metrics]
+        b = [m.global_acc for m in res_uni.metrics]
+        assert a == b
+        assert [m.weights_entropy for m in res_none.metrics] == \
+               [m.weights_entropy for m in res_uni.metrics]
+
+    def test_flaky_network_drops_participants(self, small_data, mlp_params):
+        res = _run(small_data, mlp_params,
+                   scenario=ScenarioConfig(preset="flaky-network", seed=1))
+        parts = [m.participants for m in res.metrics]
+        assert all(0 <= p <= 4 for p in parts)
+        assert min(parts) < 4          # some round lost at least one client
+        accs = [m.global_acc for m in res.metrics]
+        assert all(np.isfinite(a) for a in accs)
+
+    def test_all_dropout_fleet_is_noop(self, small_data, mlp_params):
+        """If every upload is lost every round, the global model never
+        moves (and nothing NaNs)."""
+        cfg = FedSimConfig(fraction=0.34, batch_size=8, local_epochs=1,
+                           lr=0.1, max_rounds=3,
+                           aggregation=AggregationConfig(priority=(0, 1, 2)),
+                           scenario=ScenarioConfig(preset="flaky-network"))
+        sim = FederatedSimulation(small_data, mlp_params, mlp_loss,
+                                  mlp_accuracy, cfg)
+        sim.fleet = DeviceFleet(
+            tier=jnp.zeros((12,), jnp.int32),
+            slowdown=jnp.ones((12,), jnp.float32),
+            dropout_prob=jnp.ones((12,), jnp.float32),
+            duty_cycle=jnp.ones((12,), jnp.float32),
+            phase=jnp.zeros((12,), jnp.int32),
+        )
+        sim._round_step = sim._build_round_step()
+        sim._run_block = jax.jit(sim._build_run_block())
+        res = sim.run(targets=(0.99,), device_fracs=(0.99,), verbose=False)
+        assert [m.participants for m in res.metrics] == [0, 0, 0]
+        final = jax.tree.leaves(res.final_params)
+        init = jax.tree.leaves(mlp_params)
+        for a, b in zip(final, init):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
