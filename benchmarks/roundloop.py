@@ -1,19 +1,26 @@
-"""Round-loop benchmark: on-device lax.scan blocks vs host-driven rounds.
+"""Round-loop benchmark: dispatch modes x aggregation strategies.
 
-Measures steady-state rounds/sec of ``FederatedSimulation`` in its two
-dispatch modes on the same workload and seed:
+Two sections, both on the same synthetic workload:
 
-* ``use_scan=True``  — ``eval_every`` rounds lowered as ONE XLA program
-  (client sampling, batch plans, local SGD, criteria, aggregation all
-  in-graph; eval hoisted to the block boundary),
-* ``use_scan=False`` — one jitted program per round driven from Python
-  (the pre-refactor execution model: per-round dispatch + carry handling
-  on the host).
+* **Dispatch** — steady-state rounds/sec of the engine's two execution
+  modes (``use_scan=True``: ``eval_every`` rounds lowered as ONE XLA
+  program; ``use_scan=False``: one jitted program per round driven from
+  Python — the pre-refactor execution model).
+* **Strategy** — sync vs FedBuff-style buffered async on the
+  ``tiered-fleet`` preset: wall-clock rounds/sec per strategy AND
+  *simulated time-to-target* — the virtual-clock reading when the global
+  model first reaches the target accuracy.  A sync round lasts as long
+  as its slowest participant (straggler barrier, up to the 4x tier);
+  an async wave streams arrivals at the fleet's aggregate rate, with
+  staleness feeding the prioritized multi-criteria weights — so async
+  reaches the target in fewer simulated-time units even when it needs
+  more rounds.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmark harness
-contract); "derived" reports rounds/sec and the scan speedup.  A small
-MLP keeps per-round compute light so the dispatch overhead — what this
-benchmark isolates — dominates; the same blocks drive the paper CNN
+contract); :func:`main` also returns the results as a dict, which
+``benchmarks/run.py`` dumps to ``BENCH_roundloop.json``.  A small MLP
+keeps per-round compute light so dispatch/strategy overheads — what this
+benchmark isolates — dominate; the same blocks drive the paper CNN
 unchanged.
 """
 from __future__ import annotations
@@ -24,6 +31,7 @@ import jax
 
 from repro.core import AggregationConfig
 from repro.data.synthetic import make_synth_femnist
+from repro.federated import BufferedAsyncStrategy, ScenarioConfig
 from repro.federated.simulation import FederatedSimulation, FedSimConfig
 from repro.models.mlp import init_mlp_params, mlp_accuracy, mlp_loss
 
@@ -58,11 +66,73 @@ def bench_pair(data, params, rounds: int, block: int,
     return best[False], best[True]
 
 
-def main(clients: int = 64, rounds: int = 64, block: int = 16) -> None:
+def _strategy_cfg(name: str, rounds: int, block: int) -> FedSimConfig:
+    if name == "sync":
+        return FedSimConfig(
+            fraction=0.25, batch_size=10, local_epochs=1, lr=0.1,
+            max_rounds=rounds, eval_every=block,
+            aggregation=AggregationConfig(priority=(2, 0, 1)),
+            scenario=ScenarioConfig(preset="tiered-fleet", seed=0),
+        )
+    if name == "async":
+        # staleness leads the priority order: late arrivals from the slow
+        # tiers are attenuated before Ds/Ld/Md get a say
+        return FedSimConfig(
+            fraction=0.25, batch_size=10, local_epochs=1, lr=0.1,
+            max_rounds=rounds, eval_every=block,
+            aggregation=AggregationConfig(
+                criteria=("staleness", "Ds", "Ld", "Md"),
+                priority=(0, 1, 2, 3)),
+            scenario=ScenarioConfig(preset="tiered-fleet", seed=0),
+            strategy=BufferedAsyncStrategy(buffer_size=12),
+        )
+    raise KeyError(name)
+
+
+def bench_strategies(data, params, rounds: int, block: int,
+                     target_acc: float = 0.75):
+    """Sync vs buffered-async on ``tiered-fleet``: rounds/sec + simulated
+    time (and rounds) until ``target_acc`` global accuracy."""
+    out = {}
+    for name in ("sync", "async"):
+        sim = FederatedSimulation(data, params, mlp_loss, mlp_accuracy,
+                                  _strategy_cfg(name, rounds, block))
+        # warmup: compile the scan block + eval outside the timed window
+        # (same protocol as bench_pair's rep 0)
+        sim.run(targets=(target_acc,), device_fracs=(0.99,), verbose=False)
+        sim.params = params
+        t0 = time.perf_counter()
+        res = sim.run(targets=(target_acc,), device_fracs=(0.99,),
+                      verbose=False)
+        wall = time.perf_counter() - t0
+        n_rounds = res.metrics[-1].round
+        hit = next(((m.round, m.sim_time) for m in res.metrics
+                    if m.global_acc >= target_acc), None)
+        out[name] = {
+            "rounds_per_sec": n_rounds / wall,
+            "rounds_run": n_rounds,
+            "final_acc": res.metrics[-1].global_acc,
+            "best_acc": max(m.global_acc for m in res.metrics),
+            "commits": res.metrics[-1].commits,
+            "sim_time_total": res.metrics[-1].sim_time,
+            "rounds_to_target": hit[0] if hit else None,
+            "sim_time_to_target": hit[1] if hit else None,
+        }
+    return out
+
+
+def main(clients: int = 64, rounds: int = 64, block: int = 16,
+         strat_clients: int = 32, strat_rounds: int = 200,
+         target_acc: float = 0.75) -> dict:
     data = make_synth_femnist(num_clients=clients, mean_samples=12, seed=0)
     params = init_mlp_params(jax.random.key(0), hidden=32)
 
     rps_host, rps_scan = bench_pair(data, params, rounds, block)
+
+    sdata = make_synth_femnist(num_clients=strat_clients, mean_samples=30,
+                               seed=0)
+    sparams = init_mlp_params(jax.random.key(0), hidden=48)
+    strat = bench_strategies(sdata, sparams, strat_rounds, 10, target_acc)
 
     rows = [
         ("roundloop_host_us_per_round", 1e6 / rps_host,
@@ -72,8 +142,35 @@ def main(clients: int = 64, rounds: int = 64, block: int = 16) -> None:
         ("roundloop_scan_speedup", rps_scan / rps_host,
          f"{clients} clients, {rounds} rounds"),
     ]
+    for name in ("sync", "async"):
+        s = strat[name]
+        rows.append((
+            f"roundloop_{name}_us_per_round", 1e6 / s["rounds_per_sec"],
+            f"{s['rounds_per_sec']:.2f} rounds/s tiered-fleet",
+        ))
+        rows.append((
+            f"roundloop_{name}_simtime_to_{target_acc:.2f}",
+            s["sim_time_to_target"] if s["sim_time_to_target"] is not None
+            else -1.0,
+            f"round {s['rounds_to_target']}, best_acc={s['best_acc']:.3f}",
+        ))
     for name, val, derived in rows:
         print(f"{name},{val:.2f},{derived}")
+
+    return {
+        "dispatch": {
+            "host_rounds_per_sec": rps_host,
+            "scan_rounds_per_sec": rps_scan,
+            "scan_speedup": rps_scan / rps_host,
+            "clients": clients, "rounds": rounds, "block": block,
+        },
+        "strategies": {
+            "preset": "tiered-fleet",
+            "target_acc": target_acc,
+            "clients": strat_clients, "max_rounds": strat_rounds,
+            **strat,
+        },
+    }
 
 
 if __name__ == "__main__":

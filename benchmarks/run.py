@@ -15,6 +15,7 @@ here); see EXPERIMENTS.md §Dry-run / §Roofline.
 """
 from __future__ import annotations
 
+import json
 import subprocess
 import sys
 import time
@@ -29,11 +30,14 @@ def main() -> None:
 
     microbench.main()
 
-    print("# === round loop: lax.scan blocks vs host-driven rounds ===",
+    print("# === round loop: dispatch modes x aggregation strategies ===",
           flush=True)
     from benchmarks import roundloop
 
-    roundloop.main()
+    roundloop_results = roundloop.main()
+    bench_out = ROOT / "BENCH_roundloop.json"
+    bench_out.write_text(json.dumps(roundloop_results, indent=2))
+    print(f"# roundloop results -> {bench_out}", flush=True)
 
     print("# === paper Table 1 (reduced scale; see benchmarks/table1.py "
           "--full for the complete sweep) ===", flush=True)

@@ -1,0 +1,121 @@
+"""Buffered-async vs sync on a flaky network: the round engine's
+strategies A/B'd on one fleet.
+
+Runs the same federated workload on the ``flaky-network`` preset (uniform
+compute, always-on devices, heavy-tailed per-round upload loss) under
+three aggregation policies from ``repro.federated.engine``:
+
+* ``sync``     — the paper's synchronous round: the server barriers on
+  every surviving participant each round,
+* ``async``    — FedBuff-style buffered aggregation: arrivals stream into
+  a buffer, the server commits whenever ``--buffer`` updates are in, and
+  each arrival's weight is attenuated by the registered ``staleness``
+  criterion (rounds since that client's last committed sync) through the
+  same prioritized multi-criteria operator as Ds/Ld/Md,
+* ``fedavg``   — dataset-size-only weighting, the FedAvg baseline.
+
+Reports accuracy against the *virtual clock* (``RoundMetrics.sim_time``):
+sync pays the straggler barrier ``max_k dt_k`` every round, async pays
+the aggregate-arrival-rate wave time.  On ``flaky-network`` (uniform
+compute) the barrier is mild, so buffering mostly demonstrates dropout
+tolerance; run ``--preset tiered-fleet`` (2-4x compute stragglers) to see
+the async win — e.g. at defaults async reaches 0.60 global accuracy in
+~84 simulated-time units vs ~153 for sync (sync's 120 rounds cost 459
+time units; async's cost 146).
+
+    PYTHONPATH=src python examples/async_fleet.py --rounds 120
+    PYTHONPATH=src python examples/async_fleet.py --preset tiered-fleet
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+
+from repro.core import AggregationConfig
+from repro.data.synthetic import make_synth_femnist
+from repro.federated import (
+    BufferedAsyncStrategy,
+    FedAvgStrategy,
+    ScenarioConfig,
+)
+from repro.federated.simulation import FederatedSimulation, FedSimConfig
+from repro.models.mlp import init_mlp_params, mlp_accuracy, mlp_loss
+
+
+def _config(name: str, args) -> FedSimConfig:
+    scenario = ScenarioConfig(preset=args.preset, seed=args.fleet_seed)
+    common = dict(fraction=0.25, batch_size=10, local_epochs=1, lr=0.1,
+                  max_rounds=args.rounds, eval_every=args.block,
+                  scenario=scenario)
+    if name == "sync":
+        return FedSimConfig(
+            aggregation=AggregationConfig(priority=(2, 0, 1)), **common)
+    if name == "async":
+        return FedSimConfig(
+            aggregation=AggregationConfig(
+                criteria=("staleness", "Ds", "Ld", "Md"),
+                priority=(0, 1, 2, 3)),
+            strategy=BufferedAsyncStrategy(buffer_size=args.buffer),
+            **common)
+    if name == "fedavg":
+        return FedSimConfig(
+            aggregation=AggregationConfig(priority=(0, 1, 2)),
+            strategy=FedAvgStrategy(), **common)
+    raise KeyError(name)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=48)
+    ap.add_argument("--rounds", type=int, default=120)
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--block", type=int, default=10,
+                    help="rounds per lax.scan block (eval cadence)")
+    ap.add_argument("--buffer", type=int, default=18,
+                    help="async buffer size (arrivals per commit)")
+    ap.add_argument("--preset", default="flaky-network")
+    ap.add_argument("--fleet-seed", type=int, default=0)
+    ap.add_argument("--target", type=float, default=0.6)
+    ap.add_argument("--out", default="checkpoints/async_fleet.json")
+    args = ap.parse_args()
+
+    data = make_synth_femnist(num_clients=args.clients, mean_samples=40,
+                              seed=0)
+    params = init_mlp_params(jax.random.key(0), hidden=args.hidden)
+
+    report = {}
+    for name in ("sync", "async", "fedavg"):
+        sim = FederatedSimulation(data, params, mlp_loss, mlp_accuracy,
+                                  _config(name, args))
+        res = sim.run(targets=(args.target,), device_fracs=(0.99,),
+                      verbose=False)
+        accs = [m.global_acc for m in res.metrics]
+        hit = next(((m.round, m.sim_time) for m in res.metrics
+                    if m.global_acc >= args.target), None)
+        report[name] = {
+            "final_acc": accs[-1],
+            "best_acc": max(accs),
+            "commits": res.metrics[-1].commits,
+            "sim_time_total": res.metrics[-1].sim_time,
+            "rounds_to_target": hit[0] if hit else None,
+            "sim_time_to_target": hit[1] if hit else None,
+            "curve": [(m.round, round(m.global_acc, 4), round(m.sim_time, 2))
+                      for m in res.metrics],
+        }
+        t_hit = f"{hit[1]:8.1f}" if hit else "   never"
+        print(f"[{name:6s}] best={max(accs):.3f} "
+              f"commits={res.metrics[-1].commits:4d} "
+              f"sim_time_to_{args.target:.2f}={t_hit} "
+              f"(total simulated {res.metrics[-1].sim_time:.1f})")
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=2))
+    print(f"[driver] report in {out}")
+
+
+if __name__ == "__main__":
+    main()

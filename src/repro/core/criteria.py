@@ -33,11 +33,24 @@ from repro.utils.pytree import PyTree, tree_sq_norm
 #   ctx fields are optional; criteria use what they need.
 
 
+@jax.tree_util.register_pytree_node_class
 @dataclass
 class ClientContext:
     """Everything a criterion may inspect for one client.
 
     All fields are per-client; any may be ``None`` when not applicable.
+
+    Registered as a pytree (``None`` fields are empty subtrees), so a
+    *batched* context — every populated field carrying a leading client
+    axis — vmaps straight through :func:`measure_criteria`::
+
+        ctx = ClientContext(num_examples=counts,          # [K]
+                            label_counts=histograms,      # [K, C]
+                            update=stacked_updates)       # leaves [K, ...]
+        raw = jax.vmap(lambda c: measure_criteria(names, c))(ctx)  # [K, m]
+
+    This is how the round engine plumbs client shards, fleet profiles and
+    staleness clocks into registered criteria without per-criterion code.
     """
 
     num_examples: Optional[jax.Array] = None     # |D_k| (scalar)
@@ -48,6 +61,15 @@ class ClientContext:
     flops_per_sec: Optional[jax.Array] = None    # declared capability
     staleness: Optional[jax.Array] = None        # rounds since last sync
     availability: Optional[jax.Array] = None     # expected participation [0,1]
+
+    def tree_flatten(self):
+        return (self.num_examples, self.label_counts, self.update,
+                self.global_params, self.expert_counts, self.flops_per_sec,
+                self.staleness, self.availability), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
 
 
 def dataset_size(ctx: ClientContext) -> jax.Array:

@@ -1,20 +1,40 @@
+from repro.federated.engine import (
+    STRATEGIES,
+    AggregationStrategy,
+    BufferedAsyncStrategy,
+    FedAvgStrategy,
+    RoundInputs,
+    ServerState,
+    SyncStrategy,
+    make_strategy,
+)
 from repro.federated.sampler import sample_clients, sample_clients_jax
 from repro.federated.scenarios import (
     PRESETS,
     DeviceFleet,
     ScenarioConfig,
+    completion_time,
     make_fleet,
     participation,
 )
 from repro.federated.simulation import FederatedSimulation, FedSimConfig
 
 __all__ = [
+    "AggregationStrategy",
+    "BufferedAsyncStrategy",
     "DeviceFleet",
+    "FedAvgStrategy",
     "FederatedSimulation",
     "FedSimConfig",
     "PRESETS",
+    "RoundInputs",
+    "STRATEGIES",
     "ScenarioConfig",
+    "ServerState",
+    "SyncStrategy",
+    "completion_time",
     "make_fleet",
+    "make_strategy",
     "participation",
     "sample_clients",
     "sample_clients_jax",

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.criteria import ClientContext, get_criterion
 from repro.core.operators import all_permutations, prioritized_score
 from repro.launch.mesh import client_axes, num_clients
 from repro.models.registry import ModelBundle
@@ -49,11 +50,17 @@ def _batch_in_specs(batch: Dict[str, jax.Array], caxes) -> Dict[str, P]:
 def _client_criteria(
     batch: Dict[str, jax.Array], grads: PyTree, lr: float, vocab_size: int,
     caxes: Tuple[str, ...], part: Optional[jax.Array] = None,
+    stale: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Per-client normalized criteria vector [m] (sums to 1 over clients).
 
     ``part`` is this client's scalar participation (scenario mask): 0
-    excludes it from the round's normalizing constant entirely.
+    excludes it from the round's normalizing constant entirely.  ``stale``
+    is this client's scalar staleness (rounds since its update was last
+    committed, from the engine's ``ServerState.last_sync`` clocks): when
+    given, the registered ``staleness`` criterion is appended as a fourth
+    column, so async stale-gradient runs down-weight late arrivals with
+    the same machinery on the mesh as on one host.
     """
     labels = batch["labels"]
     mask = batch.get("loss_mask")
@@ -66,7 +73,12 @@ def _client_criteria(
     gnorm = jnp.sqrt(tree_sq_norm(grads))
     md_raw = 1.0 / jnp.sqrt(lr * gnorm + 1.0)
 
-    raw = jnp.stack([ds_raw, ld_raw, md_raw])        # [m]
+    cols = [ds_raw, ld_raw, md_raw]
+    if stale is not None:
+        cols.append(get_criterion("staleness")(
+            ClientContext(staleness=stale)
+        ))
+    raw = jnp.stack(cols)                            # [m]
     if part is not None:
         raw = raw * part
     total = jax.lax.psum(raw, caxes)
@@ -112,10 +124,11 @@ def make_federated_train_step(
     bundle: ModelBundle,
     mesh,
     lr: float = 0.01,
-    priority: Tuple[int, ...] = (0, 1, 2),
+    priority: Optional[Tuple[int, ...]] = None,
     fedavg_baseline: bool = False,
     agg_mode: str = "allreduce",
     with_participation: bool = False,
+    with_staleness: bool = False,
 ) -> Callable:
     """Jitted federated train step: ``step(params, batch) -> (params, stats)``.
 
@@ -124,20 +137,39 @@ def make_federated_train_step(
     ``agg_mode``: "allreduce" (f32 psum, paper-faithful baseline) or
     "rs_ag_bf16" (f32 reduce-scatter + bf16 all-gather — beyond-paper
     collective optimization, §Perf).
-    ``with_participation=True`` changes the signature to
-    ``step(params, batch, participation)`` where ``participation`` is the
+    ``with_participation=True`` appends a ``participation`` argument: the
     ``[K]`` per-client scenario mask/contribution
     (``repro.federated.scenarios.participation``): 0 excludes a client
     from criteria normalization and the weighted psum, fractional values
     down-weight stragglers; an all-dropped round degenerates to a no-op
     update (all weights 0).
+    ``with_staleness=True`` appends a ``staleness`` argument: the ``[K]``
+    per-client rounds-since-last-sync vector (the engine's
+    ``ServerState.last_sync`` clocks), measured through the registered
+    ``staleness`` criterion as a fourth criteria column — async runs on
+    the mesh down-weight stale updates exactly like the single-host
+    engine.  The full signature with both flags is
+    ``step(params, batch, participation, staleness)``.
+    ``priority`` defaults to identity order over however many criteria
+    are active (3, or 4 with staleness).
     """
     caxes = client_axes(mesh)
     K = num_clients(mesh)
     cfg = bundle.cfg
+    m = len(CRITERIA_NAMES) + (1 if with_staleness else 0)
+    if priority is None:
+        priority = tuple(range(m))
+    if len(priority) != m:
+        raise ValueError(
+            f"priority {priority} must permute all {m} active criteria"
+        )
 
-    def per_client(params, batch, part=None):
+    def per_client(params, batch, *extra):
+        extra = list(extra)
+        part = extra.pop(0) if with_participation else None
+        stale = extra.pop(0) if with_staleness else None
         pm = None if part is None else part.reshape(())
+        st = None if stale is None else stale.reshape(())
         (loss, _), grads = jax.value_and_grad(
             lambda p: bundle.loss(p, batch), has_aux=True
         )(params)
@@ -145,7 +177,8 @@ def make_federated_train_step(
         # fractional straggler contribution is applied once, to the score —
         # same semantics as the single-host round loop (scenarios.py)
         bin_pm = None if pm is None else (pm > 0).astype(jnp.float32)
-        c = _client_criteria(batch, grads, lr, cfg.vocab_size, caxes, bin_pm)
+        c = _client_criteria(batch, grads, lr, cfg.vocab_size, caxes, bin_pm,
+                             st)
 
         s = c[0] if fedavg_baseline else prioritized_score(c, priority)
         if pm is not None:
@@ -184,29 +217,27 @@ def make_federated_train_step(
         {"loss": P(), "weight": P(caxes), "criteria": P(caxes, None)},
     )
 
-    def train_step(params, batch):
+    n_extra = int(with_participation) + int(with_staleness)
+
+    def train_step(params, batch, *extra):
+        if len(extra) != n_extra:
+            raise TypeError(
+                f"step expects {n_extra} extra [K] argument(s) "
+                f"(participation={with_participation}, "
+                f"staleness={with_staleness}), got {len(extra)}"
+            )
         agg, stats = jax.shard_map(
             per_client,
             mesh=mesh,
-            in_specs=(P(), _batch_in_specs(batch, caxes)),
+            in_specs=(P(), _batch_in_specs(batch, caxes),
+                      *(P(caxes) for _ in extra)),
             out_specs=out_specs,
             axis_names=set(caxes),
             check_vma=False,
-        )(params, batch)
+        )(params, batch, *extra)
         return _sgd(params, agg, lr), stats
 
-    def train_step_part(params, batch, participation):
-        agg, stats = jax.shard_map(
-            per_client,
-            mesh=mesh,
-            in_specs=(P(), _batch_in_specs(batch, caxes), P(caxes)),
-            out_specs=out_specs,
-            axis_names=set(caxes),
-            check_vma=False,
-        )(params, batch, participation)
-        return _sgd(params, agg, lr), stats
-
-    return train_step_part if with_participation else train_step
+    return train_step
 
 
 def make_federated_adjust_step(

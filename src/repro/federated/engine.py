@@ -1,0 +1,389 @@
+"""Round-engine core: one server loop, pluggable aggregation strategies.
+
+PR 1 left the repo with two bespoke round drivers — the single-host
+simulation and the Mode-B distributed step — each hand-rolling criteria
+measurement, weighting and Algorithm-1 state.  This module extracts the
+shared server-side machinery so sync, buffered-async and FedAvg-baseline
+execution are *policies* over one engine rather than three copies of it:
+
+* :class:`ServerState` — the scan carry: global params, Algorithm-1
+  quality/priority, per-client ``last_sync`` staleness clocks, the async
+  update buffer, and the virtual clock,
+* :class:`RoundInputs` — everything one round produced on the "client
+  side" (locally-trained models, normalized criteria, scenario masks,
+  per-client virtual completion times),
+* :class:`AggregationStrategy` — the protocol a policy implements, with
+  three implementations:
+
+  - :class:`SyncStrategy` — the paper's synchronous round: every
+    participant's model is aggregated immediately (optionally through
+    Algorithm-1 online priority adjustment).  Bit-for-bit identical to
+    the pre-engine round loop on the ``uniform`` preset.
+  - :class:`BufferedAsyncStrategy` — FedBuff-style buffered async
+    (Nguyen et al., 2022): arrivals accumulate score-weighted *updates*
+    in a buffer and the server commits one global step whenever
+    ``buffer_size`` arrivals are in.  Staleness (rounds since a client's
+    last committed sync) feeds the registered ``staleness`` criterion,
+    so stale updates are down-weighted by the same prioritized
+    multi-criteria machinery that weights everything else.
+  - :class:`FedAvgStrategy` — dataset-size-only weighting (McMahan et
+    al., 2017), the paper's baseline, for A/B against either of the
+    above.
+
+Virtual time: scenario fleets assign each selected client a completion
+time ``dt_k`` (``scenarios.completion_time``).  A sync round lasts
+``max_k dt_k`` — the server waits for its slowest participant — while an
+async tick lasts ``n / sum_k(1/dt_k)`` (``n`` arrivals at the fleet's
+aggregate arrival rate): the server never barriers on stragglers.  Both
+advance ``ServerState.sim_time``, which is what the round-loop benchmark
+compares for time-to-target.
+
+Everything here is pure jnp on traced values — strategies run unchanged
+inside ``jax.lax.scan`` round blocks and under jit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    AggregationConfig,
+    adjust_round_vectorized,
+    aggregate_models,
+    compute_scores,
+    compute_weights,
+)
+from repro.core.criteria import resolve
+from repro.utils.pytree import PyTree
+
+# Candidate evaluation (Algorithm-1 lines 13-16): params -> scalar quality.
+EvalFn = Callable[[PyTree], jax.Array]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class ServerState:
+    """The engine's scan carry — everything the server remembers.
+
+    Buffer fields are ``None`` for strategies that never buffer (sync,
+    fedavg); ``None`` children are empty pytree subtrees, so the same
+    carry structure threads through ``lax.scan`` for every strategy.
+    """
+
+    params: PyTree
+    quality: jax.Array                 # Algorithm-1 previous quality (f32)
+    priority_idx: jax.Array            # index into all_permutations (i32)
+    last_sync: jax.Array               # [K] round of last committed sync (i32)
+    sim_time: jax.Array                # virtual clock (f32, time units)
+    commits: jax.Array                 # global updates committed so far (i32)
+    buffer: Optional[PyTree] = None    # score-weighted update sum (async)
+    buffer_weight: Optional[jax.Array] = None  # sum of buffered scores (f32)
+    buffer_count: Optional[jax.Array] = None   # buffered arrivals (i32)
+    in_buffer: Optional[jax.Array] = None      # [K] 0/1 pending-arrival mask
+
+    def tree_flatten(self):
+        children = (self.params, self.quality, self.priority_idx,
+                    self.last_sync, self.sim_time, self.commits,
+                    self.buffer, self.buffer_weight, self.buffer_count,
+                    self.in_buffer)
+        return children, None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@dataclass
+class RoundInputs:
+    """One round's client-side products, handed to the strategy."""
+
+    rnd: jax.Array        # round id (i32 scalar)
+    sel: jax.Array        # [S] selected client indices
+    stacked: PyTree       # [S, ...] locally-trained client models
+    criteria: jax.Array   # [S, m] normalized criteria matrix
+    mask: jax.Array       # [S] binary participation
+    contrib: jax.Array    # [S] mask / slowdown (straggler down-weighting)
+    dt: jax.Array         # [S] virtual completion times (time units)
+
+
+def _scatter_round(last_sync: jax.Array, sel: jax.Array, mask: jax.Array,
+                   rnd: jax.Array, gate: jax.Array) -> jax.Array:
+    """``last_sync[sel] = rnd`` where ``mask`` and ``gate`` hold."""
+    upd = jnp.where(gate * mask > 0, rnd, last_sync[sel])
+    return last_sync.at[sel].set(upd.astype(last_sync.dtype))
+
+
+def _entropy(p: jax.Array) -> jax.Array:
+    return -jnp.sum(p * jnp.log(jnp.maximum(p, 1e-12)))
+
+
+class AggregationStrategy:
+    """Protocol: how a round's client products become a server update."""
+
+    #: criteria (canonical names) this strategy reads from the matrix.
+    requires: Tuple[str, ...] = ()
+    #: whether Algorithm-1 online adjustment is meaningful under this policy.
+    supports_online_adjust: bool = True
+
+    def init_state(self, params: PyTree, num_clients: int,
+                   priority_idx: int) -> ServerState:
+        return ServerState(
+            params=params,
+            quality=jnp.asarray(0.0, jnp.float32),
+            priority_idx=jnp.asarray(priority_idx, jnp.int32),
+            last_sync=jnp.zeros((num_clients,), jnp.int32),
+            sim_time=jnp.asarray(0.0, jnp.float32),
+            commits=jnp.asarray(0, jnp.int32),
+        )
+
+    def avoid_mask(self, state: ServerState) -> Optional[jax.Array]:
+        """Optional [K] 0/1 mask of clients to avoid re-selecting
+        (``sample_clients_jax(avoid=...)``)."""
+        return None
+
+    def step(self, state: ServerState, inp: RoundInputs,
+             cfg: AggregationConfig, online_adjust: bool,
+             eval_fn: EvalFn) -> Tuple[ServerState, dict]:
+        raise NotImplementedError
+
+
+class SyncStrategy(AggregationStrategy):
+    """The paper's synchronous round — aggregate every participant now.
+
+    Reproduces the pre-engine round loop bit for bit (regression-tested
+    against a recorded pre-refactor trajectory on the ``uniform``
+    preset): same weighting, same Algorithm-1 path, same all-dropped
+    no-op guard.  The round's virtual duration is the straggler barrier
+    ``max_k dt_k`` over participants.
+    """
+
+    def step(self, state, inp, cfg, online_adjust, eval_fn):
+        params, prev_q, prio_idx = state.params, state.quality, state.priority_idx
+        c, contrib = inp.criteria, inp.contrib
+
+        if online_adjust:
+            res = adjust_round_vectorized(
+                c, inp.stacked, cfg, prio_idx, prev_q,
+                eval_fn=eval_fn, mask=contrib,
+            )
+            new_params, p = res.global_params, res.weights
+            new_q = res.quality
+            new_prio = res.priority.astype(jnp.int32)
+            backtracked = res.backtracked
+            n_eval = jnp.asarray(res.num_evaluated, jnp.int32)
+        else:
+            p = compute_weights(c, cfg, tuple(cfg.priority), mask=contrib)
+            new_params = aggregate_models(inp.stacked, p)
+            new_q, new_prio = prev_q, prio_idx
+            backtracked = jnp.asarray(False)
+            n_eval = jnp.asarray(1, jnp.int32)
+
+        # If every selected client dropped out, the round is a no-op:
+        # keep the previous global model and adjustment state.
+        alive = jnp.sum(contrib) > 0
+        new_params = jax.tree.map(
+            lambda a, b: jnp.where(alive, a, b), new_params, params
+        )
+        new_q = jnp.where(alive, new_q, prev_q)
+        new_prio = jnp.where(alive, new_prio, prio_idx)
+        backtracked = jnp.where(alive, backtracked, False)
+
+        alive_f = alive.astype(jnp.float32)
+        barrier = jnp.max(inp.dt * inp.mask)      # server waits for stragglers
+        new_state = replace(
+            state,
+            params=new_params,
+            quality=new_q,
+            priority_idx=new_prio,
+            last_sync=_scatter_round(state.last_sync, inp.sel, inp.mask,
+                                     inp.rnd, alive_f),
+            sim_time=state.sim_time + jnp.where(alive, barrier, 1.0),
+            commits=state.commits + alive.astype(jnp.int32),
+        )
+        ys = {
+            "entropy": _entropy(p),
+            "priority_idx": new_prio,
+            "backtracked": backtracked,
+            "num_evaluated": n_eval,
+        }
+        return new_state, ys
+
+
+class FedAvgStrategy(AggregationStrategy):
+    """Dataset-size-only weighting — the FedAvg baseline, for A/B runs.
+
+    Slices the ``dataset_size`` column out of whatever criteria matrix
+    the round measured, so a multi-criteria config can be A/B'd against
+    its own Ds-only shadow without re-measuring anything.
+    """
+
+    requires = ("dataset_size",)
+    supports_online_adjust = False
+
+    _DS_CFG = AggregationConfig(criteria=("Ds",), priority=(0,))
+
+    def step(self, state, inp, cfg, online_adjust, eval_fn):
+        names = tuple(resolve(n) for n in cfg.criteria)
+        ds = names.index("dataset_size")
+        p = compute_weights(inp.criteria[:, ds:ds + 1], self._DS_CFG, (0,),
+                            mask=inp.contrib)
+        new_params = aggregate_models(inp.stacked, p)
+
+        alive = jnp.sum(inp.contrib) > 0
+        new_params = jax.tree.map(
+            lambda a, b: jnp.where(alive, a, b), new_params, state.params
+        )
+        barrier = jnp.max(inp.dt * inp.mask)
+        new_state = replace(
+            state,
+            params=new_params,
+            last_sync=_scatter_round(state.last_sync, inp.sel, inp.mask,
+                                     inp.rnd, alive.astype(jnp.float32)),
+            sim_time=state.sim_time + jnp.where(alive, barrier, 1.0),
+            commits=state.commits + alive.astype(jnp.int32),
+        )
+        ys = {
+            "entropy": _entropy(p),
+            "priority_idx": state.priority_idx,
+            "backtracked": jnp.asarray(False),
+            "num_evaluated": jnp.asarray(1, jnp.int32),
+        }
+        return new_state, ys
+
+
+@dataclass(frozen=True)
+class BufferedAsyncStrategy(AggregationStrategy):
+    """FedBuff-style buffered asynchronous aggregation.
+
+    Each engine tick is an *arrival wave*: the selected clients train
+    from the current committed model and their updates ``w_k - w_G``
+    enter the buffer weighted by their multi-criteria scores.  Every
+    arrival buys one buffer "slot" — a wave of ``n`` participants buffers
+    total weight ``n``, split across its arrivals in proportion to their
+    scores — so criteria decide relative weight *within* a wave while
+    sparse and full waves contribute in proportion to their arrivals.
+    When ``buffer_size`` arrivals have accumulated — possibly
+    across several waves — the server commits one global step, the
+    weighted mean of everything buffered, scaled by ``server_lr``:
+
+        w_G <- w_G + server_lr * (sum_k w_k' (w_k - w_G)) / (sum_k w_k')
+
+    Staleness: ``last_sync[k]`` records the round whose commit last
+    absorbed client ``k``; a new arrival carries ``rnd - last_sync[k]``,
+    which the round measures through the registered ``staleness``
+    criterion (``1 / (1 + s)``).  Put ``"staleness"`` in the
+    ``AggregationConfig.criteria`` tuple (e.g. first in the priority
+    order) and stale updates are attenuated by exactly the machinery the
+    paper uses for Ds/Ld/Md — no special-cased staleness discount.
+
+    In-flight clients (buffered, not yet committed) are excluded from
+    re-selection through :meth:`avoid_mask` — a device still uploading
+    does not start a second local run.
+
+    A wave's virtual duration is ``n / sum(1/dt_k)`` over its ``n``
+    participants: arrivals stream in at the fleet's aggregate rate, so
+    (unlike the sync barrier ``max dt_k``) one 4x straggler costs 4x
+    *its own* slot, not 4x everyone's round.
+
+    Algorithm-1 online adjustment is a synchronous-quality feedback loop
+    and is not supported here.
+    """
+
+    buffer_size: int = 8
+    server_lr: float = 1.0
+
+    supports_online_adjust = False
+
+    def init_state(self, params, num_clients, priority_idx):
+        base = super().init_state(params, num_clients, priority_idx)
+        return replace(
+            base,
+            buffer=jax.tree.map(jnp.zeros_like, params),
+            buffer_weight=jnp.asarray(0.0, jnp.float32),
+            buffer_count=jnp.asarray(0, jnp.int32),
+            in_buffer=jnp.zeros((num_clients,), jnp.float32),
+        )
+
+    def avoid_mask(self, state):
+        # soft-exclude in-flight clients from the next wave's sample
+        return state.in_buffer
+
+    def step(self, state, inp, cfg, online_adjust, eval_fn):
+        n_part = jnp.sum(inp.mask)
+        # Criteria columns are *shares* normalized within the wave (a lone
+        # survivor of a sparse wave scores ~1.0 where a full wave's clients
+        # score ~1/n), so raw scores are not comparable across the waves a
+        # commit may span.  Each arrival therefore buys one "slot": a wave
+        # buffers total weight n_part, split across its arrivals by their
+        # multi-criteria scores — criteria (incl. staleness) set relative
+        # weight within the wave, arrival counts set it across waves.
+        s = compute_scores(inp.criteria, cfg, tuple(cfg.priority)) * inp.contrib
+        p_wave = s / jnp.maximum(jnp.sum(s), 1e-12)
+        wave_w = p_wave * n_part
+        delta = jax.tree.map(
+            lambda w, g: w - g[None], inp.stacked, state.params
+        )
+        buffer = jax.tree.map(
+            lambda b, d: b + jnp.tensordot(wave_w, d, axes=(0, 0)),
+            state.buffer, delta,
+        )
+        buffer_weight = state.buffer_weight + jnp.sum(wave_w)
+        buffer_count = state.buffer_count + jnp.sum(inp.mask).astype(jnp.int32)
+        in_buffer = state.in_buffer.at[inp.sel].max(inp.mask)
+
+        commit = buffer_count >= self.buffer_size
+        scale = jnp.where(
+            commit, self.server_lr / jnp.maximum(buffer_weight, 1e-12), 0.0
+        )
+        new_params = jax.tree.map(
+            lambda p, b: p + scale * b, state.params, buffer
+        )
+
+        keep = 1.0 - commit.astype(jnp.float32)
+        last_sync = jnp.where(
+            commit & (in_buffer > 0), inp.rnd, state.last_sync
+        ).astype(jnp.int32)
+
+        rate = jnp.sum(inp.mask / jnp.maximum(inp.dt, 1e-6))
+        wave_time = jnp.where(n_part > 0, n_part / jnp.maximum(rate, 1e-12),
+                              1.0)
+
+        new_state = replace(
+            state,
+            params=new_params,
+            last_sync=last_sync,
+            sim_time=state.sim_time + wave_time,
+            commits=state.commits + commit.astype(jnp.int32),
+            buffer=jax.tree.map(lambda b: b * keep, buffer),
+            buffer_weight=buffer_weight * keep,
+            buffer_count=buffer_count * keep.astype(jnp.int32),
+            in_buffer=in_buffer * keep,
+        )
+        ys = {
+            "entropy": _entropy(p_wave),
+            "priority_idx": state.priority_idx,
+            "backtracked": jnp.asarray(False),
+            "num_evaluated": jnp.asarray(1, jnp.int32),
+        }
+        return new_state, ys
+
+
+STRATEGIES = {
+    "sync": SyncStrategy,
+    "buffered-async": BufferedAsyncStrategy,
+    "fedavg": FedAvgStrategy,
+}
+
+
+def make_strategy(name: str, **kwargs) -> AggregationStrategy:
+    """Strategy factory for configs/CLIs: ``make_strategy("buffered-async",
+    buffer_size=16)``."""
+    if name not in STRATEGIES:
+        raise KeyError(
+            f"unknown aggregation strategy {name!r}; available: "
+            f"{sorted(STRATEGIES)}"
+        )
+    return STRATEGIES[name](**kwargs)

@@ -37,16 +37,28 @@ def num_selected(num_clients: int, fraction: float) -> int:
 def sample_clients_jax(
     key: jax.Array, num_clients: int, n: int,
     weights: jax.Array | None = None,
+    avoid: jax.Array | None = None,
 ) -> jax.Array:
     """Sample ``n`` distinct clients on device (sorted ``[n]`` int32).
 
     Uniform selection is a truncated ``jax.random.permutation``; weighted
     selection perturbs log-weights with Gumbel noise and takes the top-k
     (equivalent to without-replacement sampling proportional to weights).
+
+    ``avoid`` is an optional ``[K]`` mask of clients to keep out of the
+    draw — e.g. the async engine's in-flight clients, whose updates are
+    still buffered.  Avoided clients get a vanishing (not zero) weight,
+    so they are selected only when fewer than ``n`` others remain.
     """
-    if weights is None:
+    if weights is None and avoid is None:
         return jnp.sort(jax.random.permutation(key, num_clients)[:n])
+    w = (jnp.ones((num_clients,), jnp.float32) if weights is None
+         else jnp.asarray(weights, jnp.float32))
+    if avoid is not None:
+        # floor is relative to the weight scale so soft exclusion stays
+        # ~certain even when the caller's weights are tiny (unnormalized)
+        w = w * (1.0 - jnp.asarray(avoid, jnp.float32)) + 1e-9 * jnp.max(w)
     g = jax.random.gumbel(key, (num_clients,))
-    scores = jnp.log(jnp.maximum(jnp.asarray(weights, jnp.float32), 1e-12)) + g
+    scores = jnp.log(jnp.maximum(w, 1e-12)) + g
     _, idx = jax.lax.top_k(scores, n)
     return jnp.sort(idx.astype(jnp.int32))

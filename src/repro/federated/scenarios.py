@@ -176,6 +176,26 @@ def make_fleet(cfg: ScenarioConfig, num_clients: int) -> DeviceFleet:
     return PRESETS[cfg.preset](key, num_clients, cfg.period)
 
 
+def completion_time(
+    fleet: DeviceFleet,
+    sel: jax.Array,
+    key: jax.Array,
+    base: float = 1.0,
+    jitter: float = 0.25,
+) -> jax.Array:
+    """Per-selected-client virtual completion time ``dt[S]`` (time units).
+
+    ``dt_k = base * slowdown_k * exp(jitter * eps_k)`` with standard-normal
+    ``eps_k`` — lognormal jitter around the device's tier slowdown, drawn
+    from a dedicated stream so it perturbs no other randomness.  Feeds the
+    engine's virtual clock: a sync round lasts ``max_k dt_k`` (straggler
+    barrier), a buffered-async wave ``n / sum_k(1/dt_k)`` (aggregate
+    arrival rate).  Pure jnp — safe inside jit / ``lax.scan``.
+    """
+    eps = jax.random.normal(key, sel.shape)
+    return base * fleet.slowdown[sel] * jnp.exp(jitter * eps)
+
+
 def participation(
     fleet: DeviceFleet,
     sel: jax.Array,

@@ -6,14 +6,19 @@ Implements the experimental protocol of §3 end-to-end on one host:
 * per-round uniform client sampling (fraction 0.1),
 * per-client local SGD (batch 10, 5 local epochs, lr 0.01) — run for *all*
   selected clients at once via ``vmap(lax.scan(...))``,
-* criteria measurement (Ds / Ld / Md, normalized across participants),
-* multi-criteria aggregation with any registered operator,
-* optional Algorithm-1 online priority adjustment (the vectorized variant:
-  every permutation candidate built and scored inside the round program),
+* criteria measurement through the ``core.criteria`` registry (Ds / Ld /
+  Md and any registered extension criterion, normalized across the
+  round's participants),
+* aggregation through a pluggable :class:`~repro.federated.engine.
+  AggregationStrategy` — synchronous rounds (the paper's protocol,
+  optionally with Algorithm-1 online priority adjustment), FedBuff-style
+  buffered async with staleness-aware weighting, or the Ds-only FedAvg
+  baseline — all driven by the same round block,
 * device-heterogeneity scenarios (``repro.federated.scenarios``): per-round
-  participation masks exclude dropped/unavailable clients and down-weight
-  stragglers through the ``mask`` arguments of ``normalize_criteria`` /
-  ``compute_weights`` / ``adjust_round_vectorized``,
+  participation masks exclude dropped/unavailable clients, stragglers are
+  down-weighted, and per-client completion times advance the engine's
+  virtual clock (sync rounds barrier on the slowest participant; async
+  waves do not),
 * LEAF-style evaluation: each eval point the global model is tested on
   every client's local test set; we track the fraction of devices above
   the target accuracy and the size-weighted global accuracy.
@@ -32,32 +37,34 @@ The engine is model-agnostic: it takes ``loss_fn(params, x, y)`` and
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    AggregationConfig,
-    adjust_round_vectorized,
-    aggregate_models,
-    compute_weights,
-    normalize_criteria,
-)
+from repro.core import AggregationConfig
+from repro.core.criteria import ClientContext, measure_criteria, resolve
+from repro.core.criteria import normalize_criteria
 from repro.core.operators import all_permutations
 from repro.data.pipeline import device_batch_plans
 from repro.data.synthetic import NUM_CLASSES, FederatedDataset
+from repro.federated.engine import (
+    AggregationStrategy,
+    RoundInputs,
+    ServerState,
+    SyncStrategy,
+)
 from repro.federated.sampler import num_selected, sample_clients_jax
 from repro.federated.scenarios import (
     DeviceFleet,
     ScenarioConfig,
+    completion_time,
     make_fleet,
     participation,
 )
 from repro.optim.optimizers import sgd
-from repro.utils.pytree import PyTree, tree_sq_norm
+from repro.utils.pytree import PyTree
 
 
 @dataclass
@@ -73,6 +80,7 @@ class FedSimConfig:
     seed: int = 0
     scenario: Optional[ScenarioConfig] = None  # device-heterogeneity preset
     use_scan: bool = True          # False: host-driven per-round dispatch
+    strategy: Optional[AggregationStrategy] = None  # None -> SyncStrategy()
 
 
 @dataclass
@@ -85,6 +93,8 @@ class RoundMetrics:
     num_evaluated: int
     weights_entropy: float
     participants: int              # clients surviving the scenario mask
+    sim_time: float = 0.0          # virtual clock at this eval point
+    commits: int = 0               # global updates committed so far
 
 
 @dataclass
@@ -93,15 +103,15 @@ class SimResult:
     final_params: PyTree
     rounds_to_target: Dict[Tuple[float, float], Optional[int]]
     # (target_acc, frac_devices) -> first round achieving it (None if never)
+    final_state: Optional[ServerState] = None
 
 
-def _label_diversity(labels: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
-    """[S, max_n] labels + [S] valid counts -> [S] #distinct labels."""
+def _label_histograms(labels: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
+    """[S, max_n] labels + [S] valid counts -> [S, C] label histograms."""
     S, max_n = labels.shape
-    valid = jnp.arange(max_n)[None, :] < counts[:, None]
+    valid = (jnp.arange(max_n)[None, :] < counts[:, None]).astype(jnp.float32)
     onehot = jax.nn.one_hot(labels, NUM_CLASSES, dtype=jnp.float32)
-    present = jnp.any(onehot.astype(bool) & valid[:, :, None], axis=1)
-    return jnp.sum(present.astype(jnp.float32), axis=1)
+    return jnp.sum(onehot * valid[:, :, None], axis=1)
 
 
 class FederatedSimulation:
@@ -120,6 +130,21 @@ class FederatedSimulation:
         self.loss_fn = loss_fn
         self.acc_fn = acc_fn
         self.params = init_params
+        self.strategy: AggregationStrategy = (
+            config.strategy if config.strategy is not None else SyncStrategy()
+        )
+        if config.online_adjust and not self.strategy.supports_online_adjust:
+            raise ValueError(
+                f"{type(self.strategy).__name__} does not support Algorithm-1 "
+                "online adjustment (it is a synchronous-quality feedback loop)"
+            )
+        canon = tuple(resolve(n) for n in config.aggregation.criteria)
+        for req in self.strategy.requires:
+            if resolve(req) not in canon:
+                raise ValueError(
+                    f"{type(self.strategy).__name__} requires criterion "
+                    f"{req!r} in AggregationConfig.criteria, got {canon}"
+                )
         self.fleet: Optional[DeviceFleet] = (
             make_fleet(config.scenario, data.num_clients)
             if config.scenario is not None else None
@@ -152,6 +177,13 @@ class FederatedSimulation:
         self._eval_all = jax.jit(self._eval_global)
 
     # ------------------------------------------------------------------
+    def init_state(self) -> ServerState:
+        """Fresh engine carry for the current ``self.params``."""
+        return self.strategy.init_state(
+            self.params, self.data.num_clients, self._prio_init
+        )
+
+    # ------------------------------------------------------------------
     def _eval_global(self, params):
         """Per-client test accuracies [K] + size-weighted global accuracy."""
         accs = jax.vmap(lambda xi, yi, mi: self.acc_fn(params, xi, yi, mi))(
@@ -162,37 +194,49 @@ class FederatedSimulation:
 
     def _measure_criteria(
         self, stacked: PyTree, sel: jax.Array, params: PyTree,
-        mask: jax.Array,
+        mask: jax.Array, last_sync: jax.Array, rnd: jax.Array,
     ) -> jax.Array:
-        """[S, m] criteria matrix, normalized over the round's participants."""
-        cols = []
-        for name in self.cfg.aggregation.criteria:
-            key = {"Ds": "dataset_size", "Ld": "label_diversity",
-                   "Md": "model_divergence"}.get(name, name)
-            if key == "dataset_size":
-                raw = self.counts[sel].astype(jnp.float32)
-            elif key == "label_diversity":
-                raw = _label_diversity(self.labels[sel], self.counts[sel])
-            elif key == "model_divergence":
-                def phi(client_params):
-                    diff = jax.tree.map(jnp.subtract, params, client_params)
-                    return 1.0 / jnp.sqrt(jnp.sqrt(tree_sq_norm(diff)) + 1.0)
-                raw = jax.vmap(phi)(stacked)
-            else:
-                raise KeyError(f"simulation does not measure criterion {name!r}")
-            cols.append(normalize_criteria(raw, mask))
-        return jnp.stack(cols, axis=1)
+        """[S, m] criteria matrix, normalized over the round's participants.
+
+        Every criterion goes through the ``core.criteria`` registry: a
+        batched :class:`ClientContext` is built from the client shards,
+        the fleet profile and the engine's staleness clocks, and
+        :func:`measure_criteria` is vmapped over it — so any registered
+        criterion whose context fields are available here (everything
+        except MoE ``expert_counts``) works without touching this module.
+        """
+        names = self.cfg.aggregation.criteria
+        fleet = self.fleet
+        n_examples = self.counts[sel].astype(jnp.float32)
+        label_counts = _label_histograms(self.labels[sel], self.counts[sel])
+        stale = (rnd - last_sync[sel]).astype(jnp.float32)
+        if fleet is not None:
+            flops = 1.0 / fleet.slowdown[sel]      # relative capability
+            avail = fleet.expected_availability()[sel]
+        else:
+            flops = jnp.ones_like(n_examples)
+            avail = jnp.ones_like(n_examples)
+
+        updates = jax.tree.map(lambda s, p: s - p[None], stacked, params)
+        ctx = ClientContext(
+            num_examples=n_examples, label_counts=label_counts,
+            update=updates, flops_per_sec=flops, staleness=stale,
+            availability=avail,
+        )
+        raw = jax.vmap(lambda c: measure_criteria(names, c))(ctx)
+        return normalize_criteria(raw, mask)
 
     # ------------------------------------------------------------------
     def _build_round_step(self):
-        """Pure round body ``(carry, round_idx) -> (carry, ys)``.
+        """Pure round body ``(state, round_idx) -> (state, ys)``.
 
-        Carry is ``(params, prev_quality, priority_idx)``; everything —
-        sampling, batch plans, local SGD, criteria, scenario masks,
-        aggregation, optional Algorithm 1 — happens in one traced program.
+        Carry is a :class:`ServerState`; everything — sampling, batch
+        plans, local SGD, criteria, scenario masks, and the strategy's
+        aggregation policy — happens in one traced program.
         """
         cfg = self.cfg
         fleet = self.fleet
+        strategy = self.strategy
         S = self._num_sel
         opt = sgd(cfg.lr)
         loss_fn = self.loss_fn
@@ -218,13 +262,20 @@ class FederatedSimulation:
 
         local_train = jax.vmap(one_client, in_axes=(None, 0, 0, 0))
 
-        def round_step(carry, rnd):
-            params, prev_q, prio_idx = carry
+        def round_step(state: ServerState, rnd):
+            params = state.params
             key = jax.random.fold_in(self._base_key, rnd)
             k_sel, k_batch, k_scen = jax.random.split(key, 3)
+            # derived, not split: keeps k_sel/k_batch/k_scen bit-identical
+            # to the pre-engine loop (which never sampled completion times)
+            k_time = jax.random.fold_in(key, 3)
 
-            sel = sample_clients_jax(k_sel, self.data.num_clients, S,
-                                     sel_weights)
+            avoid = strategy.avoid_mask(state)
+            if avoid is None and sel_weights is None:
+                sel = sample_clients_jax(k_sel, self.data.num_clients, S)
+            else:
+                sel = sample_clients_jax(k_sel, self.data.num_clients, S,
+                                         sel_weights, avoid=avoid)
             plans = device_batch_plans(k_batch, self.counts[sel],
                                        self._fixed_steps, cfg.batch_size)
             stacked = local_train(params, self.images[sel], self.labels[sel],
@@ -232,62 +283,31 @@ class FederatedSimulation:
 
             if fleet is not None:
                 mask, contrib = participation(fleet, sel, rnd, k_scen)
+                dt = completion_time(fleet, sel, k_time)
             else:
-                mask = contrib = jnp.ones((S,), jnp.float32)
+                mask = contrib = dt = jnp.ones((S,), jnp.float32)
 
-            c = self._measure_criteria(stacked, sel, params, mask)
+            c = self._measure_criteria(stacked, sel, params, mask,
+                                       state.last_sync, rnd)
 
-            if cfg.online_adjust:
-                res = adjust_round_vectorized(
-                    c, stacked, cfg.aggregation, prio_idx, prev_q,
-                    eval_fn=lambda cand: self._eval_global(cand)[1],
-                    mask=contrib,
-                )
-                new_params, p = res.global_params, res.weights
-                new_q = res.quality
-                new_prio = res.priority.astype(jnp.int32)
-                backtracked = res.backtracked
-                n_eval = jnp.asarray(res.num_evaluated, jnp.int32)
-            else:
-                p = compute_weights(c, cfg.aggregation,
-                                    tuple(cfg.aggregation.priority),
-                                    mask=contrib)
-                new_params = aggregate_models(stacked, p)
-                new_q, new_prio = prev_q, prio_idx
-                backtracked = jnp.asarray(False)
-                n_eval = jnp.asarray(1, jnp.int32)
-
-            # If every selected client dropped out, the round is a no-op:
-            # keep the previous global model and adjustment state.
-            alive = jnp.sum(contrib) > 0
-            new_params = jax.tree.map(
-                lambda a, b: jnp.where(alive, a, b), new_params, params
+            inp = RoundInputs(rnd=rnd, sel=sel, stacked=stacked, criteria=c,
+                              mask=mask, contrib=contrib, dt=dt)
+            state, ys = strategy.step(
+                state, inp, cfg.aggregation, cfg.online_adjust,
+                eval_fn=lambda cand: self._eval_global(cand)[1],
             )
-            new_q = jnp.where(alive, new_q, prev_q)
-            new_prio = jnp.where(alive, new_prio, prio_idx)
-            backtracked = jnp.where(alive, backtracked, False)
-
-            ent = -jnp.sum(p * jnp.log(jnp.maximum(p, 1e-12)))
-            ys = {
-                "entropy": ent,
-                "priority_idx": new_prio,
-                "backtracked": backtracked,
-                "num_evaluated": n_eval,
-                "participants": jnp.sum(mask),
-            }
-            return (new_params, new_q, new_prio), ys
+            ys["participants"] = jnp.sum(mask)
+            return state, ys
 
         return round_step
 
     def _build_run_block(self):
         """``eval_every`` rounds as one lax.scan + one boundary eval."""
 
-        def run_block(params, prev_q, prio_idx, round_ids):
-            (params, prev_q, prio_idx), ys = jax.lax.scan(
-                self._round_step, (params, prev_q, prio_idx), round_ids
-            )
-            accs, global_acc = self._eval_global(params)
-            return params, prev_q, prio_idx, ys, accs, global_acc
+        def run_block(state: ServerState, round_ids):
+            state, ys = jax.lax.scan(self._round_step, state, round_ids)
+            accs, global_acc = self._eval_global(state.params)
+            return state, ys, accs, global_acc
 
         return run_block
 
@@ -306,25 +326,19 @@ class FederatedSimulation:
             (t, f): None for t in targets for f in device_fracs
         }
 
-        params = self.params
-        prev_q = jnp.asarray(0.0, jnp.float32)
-        prio_idx = jnp.asarray(self._prio_init, jnp.int32)
+        state = self.init_state()
 
         rnd = 0
         while rnd < cfg.max_rounds:
             n = min(block, cfg.max_rounds - rnd)
             round_ids = jnp.arange(rnd + 1, rnd + n + 1, dtype=jnp.int32)
             if cfg.use_scan:
-                params, prev_q, prio_idx, ys, accs, global_acc = (
-                    self._run_block(params, prev_q, prio_idx, round_ids)
-                )
+                state, ys, accs, global_acc = self._run_block(state, round_ids)
                 last = jax.tree.map(lambda a: a[-1], ys)
             else:
                 for rid in round_ids:
-                    (params, prev_q, prio_idx), last = self._run_one(
-                        (params, prev_q, prio_idx), rid
-                    )
-                accs, global_acc = self._eval_all(params)
+                    state, last = self._run_one(state, rid)
+                accs, global_acc = self._eval_all(state.params)
             rnd += n
 
             accs = np.asarray(accs)
@@ -342,6 +356,8 @@ class FederatedSimulation:
                 num_evaluated=int(last["num_evaluated"]),
                 weights_entropy=float(last["entropy"]),
                 participants=int(last["participants"]),
+                sim_time=float(state.sim_time),
+                commits=int(state.commits),
             ))
             if verbose and (rnd % log_every == 0 or rnd >= cfg.max_rounds):
                 print(
@@ -353,6 +369,6 @@ class FederatedSimulation:
             if all(v is not None for v in rounds_to.values()):
                 break
 
-        self.params = params
-        return SimResult(metrics=metrics, final_params=params,
-                         rounds_to_target=rounds_to)
+        self.params = state.params
+        return SimResult(metrics=metrics, final_params=state.params,
+                         rounds_to_target=rounds_to, final_state=state)

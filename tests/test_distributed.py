@@ -118,6 +118,32 @@ _SCRIPT = textwrap.dedent("""
         results["participation_renormalizes"] = bool(
             abs(float(w_pm.sum()) - 1.0) < 1e-5)
 
+        # all-dropped round: an all-zero participation vector must leave
+        # the parameters bit-for-bit untouched (weights all 0 -> agg 0)
+        part0 = jnp.zeros((4,), jnp.float32)
+        p_zero, _ = jax.jit(step_pm)(params, batch, part0)
+        diffs0 = jax.tree.map(
+            lambda a, b: float(np.max(np.abs(np.asarray(a, np.float32)
+                                             - np.asarray(b, np.float32)))),
+            p_zero, params)
+        results["all_dropped_noop_err"] = max(jax.tree.leaves(diffs0))
+
+        # staleness vector: the registered staleness criterion becomes a
+        # 4th criteria column; raising one client's staleness lowers its
+        # weight while the others renormalize up
+        step_st = make_federated_train_step(mdl, mesh, lr=0.01,
+                                            with_staleness=True)
+        st_a = jnp.zeros((4,), jnp.float32)
+        st_b = jnp.asarray([0.0, 0.0, 6.0, 0.0], jnp.float32)
+        _, s_a = jax.jit(step_st)(params, batch, st_a)
+        _, s_b = jax.jit(step_st)(params, batch, st_b)
+        w_a, w_b = np.asarray(s_a["weight"]), np.asarray(s_b["weight"])
+        results["staleness_criteria_cols"] = int(
+            np.asarray(s_b["criteria"]).shape[-1])
+        results["staleness_downweights"] = bool(w_b[2] < w_a[2])
+        results["staleness_renormalizes"] = bool(
+            abs(float(w_b.sum()) - 1.0) < 1e-5)
+
         # rs_ag_bf16 aggregation == allreduce up to bf16 rounding
         step_rs = make_federated_train_step(mdl, mesh, lr=0.01,
                                             priority=(2, 0, 1),
@@ -195,6 +221,18 @@ def test_rs_ag_bf16_aggregation_matches(subproc_results):
 def test_participation_mask(subproc_results):
     assert subproc_results["participation_zeroes_dropped"]
     assert subproc_results["participation_renormalizes"]
+
+
+def test_all_dropped_round_is_param_noop(subproc_results):
+    """with_participation + all-zero vector: parameters must not move."""
+    assert subproc_results["all_dropped_noop_err"] == 0.0
+
+
+def test_staleness_vector_downweights(subproc_results):
+    """[K] staleness via the registered criterion under shard_map."""
+    assert subproc_results["staleness_criteria_cols"] == 4
+    assert subproc_results["staleness_downweights"]
+    assert subproc_results["staleness_renormalizes"]
 
 
 def test_moe_a2a_dispatch_matches_gather(subproc_results):

@@ -1,0 +1,408 @@
+"""Round-engine core: ServerState, pluggable strategies, staleness weighting.
+
+Covers the engine at two levels:
+
+* strategy unit tests on toy pytrees (no model, no data) — commit math,
+  staleness clocks, buffer lifecycle, all-dropped guards,
+* end-to-end through ``FederatedSimulation`` — the sync strategy must
+  reproduce the *pre-refactor* trajectory bit for bit (recorded golden in
+  ``tests/golden/engine_uniform.json``), FedAvg must equal a Ds-only sync
+  config, and buffered async must commit/learn on a heterogeneous fleet,
+* the staleness property: a client's aggregation weight is monotonically
+  non-increasing in its staleness, all else equal.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _helpers import init_mlp_params, mlp_accuracy, mlp_loss
+from _propcheck import given, settings, st
+from repro.core import AggregationConfig, compute_weights, normalize_criteria
+from repro.core.criteria import ClientContext, get_criterion
+from repro.data.synthetic import make_synth_femnist
+from repro.federated import (
+    BufferedAsyncStrategy,
+    FedAvgStrategy,
+    RoundInputs,
+    ScenarioConfig,
+    SyncStrategy,
+    make_strategy,
+    sample_clients_jax,
+)
+from repro.federated.simulation import FederatedSimulation, FedSimConfig
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)), "golden",
+                      "engine_uniform.json")
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    return make_synth_femnist(num_clients=16, mean_samples=24, seed=3)
+
+
+@pytest.fixture(scope="module")
+def mlp_params():
+    return init_mlp_params(jax.random.key(0), hidden=48)
+
+
+# ---------------------------------------------------------------------------
+# toy fixtures for strategy unit tests
+# ---------------------------------------------------------------------------
+
+def _toy_inputs(S=4, K=8, rnd=3, contrib=None, dt=None):
+    """RoundInputs over a 1-leaf toy model with hand-set criteria."""
+    sel = jnp.arange(S, dtype=jnp.int32)
+    stacked = {"w": jnp.arange(S * 2, dtype=jnp.float32).reshape(S, 2)}
+    c = normalize_criteria(jnp.ones((S, 3)), None)
+    contrib = jnp.ones((S,), jnp.float32) if contrib is None else contrib
+    mask = (contrib > 0).astype(jnp.float32)
+    dt = jnp.ones((S,), jnp.float32) if dt is None else dt
+    return RoundInputs(rnd=jnp.asarray(rnd, jnp.int32), sel=sel,
+                       stacked=stacked, criteria=c, mask=mask,
+                       contrib=contrib, dt=dt)
+
+
+def _toy_state(strategy, K=8):
+    params = {"w": jnp.zeros((2,), jnp.float32)}
+    return strategy.init_state(params, K, 0)
+
+
+CFG3 = AggregationConfig(priority=(0, 1, 2))
+
+
+class TestSyncStrategy:
+    def test_aggregates_and_stamps_last_sync(self):
+        strat = SyncStrategy()
+        state = _toy_state(strat)
+        inp = _toy_inputs(rnd=5)
+        state, ys = strat.step(state, inp, CFG3, False, eval_fn=None)
+        # uniform criteria -> uniform weights -> plain mean of client models
+        np.testing.assert_allclose(
+            np.asarray(state.params["w"]),
+            np.asarray(inp.stacked["w"]).mean(0), rtol=1e-6)
+        np.testing.assert_array_equal(
+            np.asarray(state.last_sync), [5, 5, 5, 5, 0, 0, 0, 0])
+        assert int(state.commits) == 1
+        assert float(state.sim_time) == 1.0   # barrier of unit dts
+
+    def test_all_dropped_is_noop(self):
+        strat = SyncStrategy()
+        state = _toy_state(strat)
+        inp = _toy_inputs(contrib=jnp.zeros((4,), jnp.float32))
+        state, _ = strat.step(state, inp, CFG3, False, eval_fn=None)
+        np.testing.assert_array_equal(np.asarray(state.params["w"]), 0.0)
+        np.testing.assert_array_equal(np.asarray(state.last_sync), 0)
+        assert int(state.commits) == 0
+
+    def test_straggler_barrier_advances_clock(self):
+        strat = SyncStrategy()
+        state = _toy_state(strat)
+        dt = jnp.asarray([1.0, 4.0, 1.0, 1.0])
+        state, _ = strat.step(state, _toy_inputs(dt=dt), CFG3, False, None)
+        assert float(state.sim_time) == 4.0   # sync waits for the straggler
+
+
+class TestFedAvgStrategy:
+    def test_weights_are_ds_share(self):
+        strat = FedAvgStrategy()
+        state = _toy_state(strat)
+        inp = _toy_inputs()
+        # make Ds non-uniform while other columns stay uniform
+        ds = normalize_criteria(jnp.asarray([4.0, 2.0, 1.0, 1.0]))
+        inp.criteria = inp.criteria.at[:, 0].set(ds)
+        state, _ = strat.step(state, inp, CFG3, False, None)
+        expect = np.asarray(ds) @ np.asarray(inp.stacked["w"])
+        np.testing.assert_allclose(np.asarray(state.params["w"]), expect,
+                                   rtol=1e-6)
+
+    def test_requires_dataset_size_column(self, small_data, mlp_params):
+        cfg = FedSimConfig(
+            max_rounds=1, strategy=FedAvgStrategy(),
+            aggregation=AggregationConfig(criteria=("Ld", "Md"),
+                                          priority=(0, 1)))
+        with pytest.raises(ValueError, match="dataset_size"):
+            FederatedSimulation(small_data, mlp_params, mlp_loss,
+                                mlp_accuracy, cfg)
+
+
+class TestBufferedAsyncStrategy:
+    def test_no_commit_below_buffer_size(self):
+        strat = BufferedAsyncStrategy(buffer_size=5)
+        state = _toy_state(strat)
+        state, _ = strat.step(state, _toy_inputs(), CFG3, False, None)
+        # 4 arrivals < 5: params unchanged, buffer holds the wave
+        np.testing.assert_array_equal(np.asarray(state.params["w"]), 0.0)
+        assert int(state.buffer_count) == 4
+        assert int(state.commits) == 0
+        np.testing.assert_array_equal(
+            np.asarray(state.in_buffer), [1, 1, 1, 1, 0, 0, 0, 0])
+        # in-flight clients are excluded from the next sample
+        assert np.asarray(strat.avoid_mask(state)).sum() == 4
+
+    def test_commit_applies_weighted_mean_and_resets(self):
+        strat = BufferedAsyncStrategy(buffer_size=8)
+        state = _toy_state(strat)
+        state, _ = strat.step(state, _toy_inputs(rnd=1), CFG3, False, None)
+        assert int(state.commits) == 0
+        state, _ = strat.step(state, _toy_inputs(rnd=2), CFG3, False, None)
+        # 8 arrivals >= 8: commit the score-weighted mean of all deltas.
+        # Both waves carry the same stacked models and uniform scores, so
+        # the committed step is the plain mean of the deltas.
+        np.testing.assert_allclose(
+            np.asarray(state.params["w"]),
+            np.asarray(_toy_inputs().stacked["w"]).mean(0), rtol=1e-5)
+        assert int(state.commits) == 1
+        assert int(state.buffer_count) == 0
+        assert float(state.buffer_weight) == 0.0
+        np.testing.assert_array_equal(np.asarray(state.in_buffer), 0.0)
+        np.testing.assert_array_equal(
+            np.asarray(state.last_sync), [2, 2, 2, 2, 0, 0, 0, 0])
+
+    def test_sparse_wave_not_overweighted_at_commit(self):
+        """A commit spanning a 1-participant wave and a 4-participant wave
+        weights all five arrivals equally when their criteria are equal —
+        wave-share normalization must not favor sparse waves."""
+        strat = BufferedAsyncStrategy(buffer_size=5)
+        state = _toy_state(strat)
+        # wave A: only client 0 survives
+        inp_a = _toy_inputs(rnd=1,
+                            contrib=jnp.asarray([1.0, 0.0, 0.0, 0.0]))
+        inp_a.criteria = normalize_criteria(jnp.ones((4, 3)), inp_a.mask)
+        state, _ = strat.step(state, inp_a, CFG3, False, None)
+        assert int(state.commits) == 0
+        # wave B: all four of clients 4..7 survive, same model payloads
+        inp_b = _toy_inputs(rnd=2)
+        inp_b.sel = jnp.asarray([4, 5, 6, 7], jnp.int32)
+        state, _ = strat.step(state, inp_b, CFG3, False, None)
+        assert int(state.commits) == 1
+        # equal criteria everywhere -> committed step is the plain mean of
+        # the five buffered deltas (clients 0 and 4..7 share one payload
+        # table, so that mean is deterministic)
+        w = np.asarray(_toy_inputs().stacked["w"])
+        expect = (w[0] + w.sum(0)) / 5.0
+        np.testing.assert_allclose(np.asarray(state.params["w"]), expect,
+                                   rtol=1e-5)
+
+    def test_server_lr_scales_commit(self):
+        full = BufferedAsyncStrategy(buffer_size=4)
+        half = BufferedAsyncStrategy(buffer_size=4, server_lr=0.5)
+        s_full, _ = full.step(_toy_state(full), _toy_inputs(), CFG3, False,
+                              None)
+        s_half, _ = half.step(_toy_state(half), _toy_inputs(), CFG3, False,
+                              None)
+        np.testing.assert_allclose(np.asarray(s_half.params["w"]),
+                                   0.5 * np.asarray(s_full.params["w"]),
+                                   rtol=1e-6)
+
+    def test_async_wave_time_is_harmonic(self):
+        strat = BufferedAsyncStrategy(buffer_size=99)
+        state = _toy_state(strat)
+        dt = jnp.asarray([1.0, 4.0, 1.0, 1.0])
+        state, _ = strat.step(state, _toy_inputs(dt=dt), CFG3, False, None)
+        # n / sum(1/dt): the straggler costs its own slot, not the round
+        np.testing.assert_allclose(float(state.sim_time),
+                                   4.0 / (3.0 + 0.25), rtol=1e-5)
+
+    def test_rejects_online_adjust(self, small_data, mlp_params):
+        cfg = FedSimConfig(
+            max_rounds=1, online_adjust=True,
+            strategy=BufferedAsyncStrategy(buffer_size=4))
+        with pytest.raises(ValueError, match="online adjustment"):
+            FederatedSimulation(small_data, mlp_params, mlp_loss,
+                                mlp_accuracy, cfg)
+
+
+class TestStrategyFactory:
+    def test_make_strategy(self):
+        assert isinstance(make_strategy("sync"), SyncStrategy)
+        s = make_strategy("buffered-async", buffer_size=16)
+        assert s.buffer_size == 16
+
+    def test_unknown_raises(self):
+        with pytest.raises(KeyError):
+            make_strategy("gossip")
+
+
+# ---------------------------------------------------------------------------
+# end-to-end through the simulation driver
+# ---------------------------------------------------------------------------
+
+class TestEngineEndToEnd:
+    def test_sync_matches_pre_refactor_golden_bitforbit(self, small_data,
+                                                        mlp_params):
+        """SyncStrategy through the engine reproduces the trajectory the
+        pre-engine round loop produced, bit for bit, on the ``uniform``
+        preset (golden recorded before the refactor)."""
+        with open(GOLDEN) as f:
+            golden = json.load(f)
+        g = golden["config"]
+        cfg = FedSimConfig(
+            fraction=g["fraction"], batch_size=g["batch_size"],
+            local_epochs=g["local_epochs"], lr=g["lr"],
+            max_rounds=g["max_rounds"], eval_every=g["eval_every"],
+            aggregation=AggregationConfig(priority=tuple(g["priority"])),
+            scenario=ScenarioConfig(preset=g["preset"]),
+        )
+        sim = FederatedSimulation(small_data, mlp_params, mlp_loss,
+                                  mlp_accuracy, cfg)
+        res = sim.run(targets=(0.99,), device_fracs=(0.99,), verbose=False)
+        assert [m.round for m in res.metrics] == golden["rounds"]
+        assert [float(m.global_acc) for m in res.metrics] == \
+            golden["global_acc"]
+        assert [float(m.weights_entropy) for m in res.metrics] == \
+            golden["weights_entropy"]
+
+    def test_fedavg_equals_ds_only_sync(self, small_data, mlp_params):
+        """FedAvgStrategy slicing Ds out of a 3-criteria matrix equals a
+        sync run configured with criteria=("Ds",) — same trajectory."""
+        def run(cfg):
+            sim = FederatedSimulation(small_data, mlp_params, mlp_loss,
+                                      mlp_accuracy, cfg)
+            res = sim.run(targets=(0.99,), device_fracs=(0.99,),
+                          verbose=False)
+            return [m.global_acc for m in res.metrics]
+
+        fa = run(FedSimConfig(
+            fraction=0.25, batch_size=8, local_epochs=1, lr=0.1,
+            max_rounds=4, eval_every=2, strategy=FedAvgStrategy(),
+            aggregation=AggregationConfig(priority=(2, 0, 1)),
+            scenario=ScenarioConfig()))
+        ds = run(FedSimConfig(
+            fraction=0.25, batch_size=8, local_epochs=1, lr=0.1,
+            max_rounds=4, eval_every=2,
+            aggregation=AggregationConfig(criteria=("Ds",), priority=(0,)),
+            scenario=ScenarioConfig()))
+        assert fa == ds
+
+    def test_async_commits_and_learns_on_tiered_fleet(self, small_data,
+                                                      mlp_params):
+        cfg = FedSimConfig(
+            fraction=0.25, batch_size=8, local_epochs=1, lr=0.1,
+            max_rounds=8, eval_every=4,
+            aggregation=AggregationConfig(
+                criteria=("staleness", "Ds", "Ld", "Md"),
+                priority=(0, 1, 2, 3)),
+            scenario=ScenarioConfig(preset="tiered-fleet", seed=1),
+            strategy=BufferedAsyncStrategy(buffer_size=6),
+        )
+        sim = FederatedSimulation(small_data, mlp_params, mlp_loss,
+                                  mlp_accuracy, cfg)
+        res = sim.run(targets=(0.99,), device_fracs=(0.99,), verbose=False)
+        assert res.metrics[-1].commits > 0
+        assert all(np.isfinite(m.global_acc) for m in res.metrics)
+        # the committed model moved off the initial params
+        moved = jax.tree.map(
+            lambda a, b: float(np.max(np.abs(np.asarray(a) - np.asarray(b)))),
+            res.final_params, mlp_params)
+        assert max(jax.tree.leaves(moved)) > 0
+        # virtual clock is strictly increasing across eval points
+        times = [m.sim_time for m in res.metrics]
+        assert all(b > a for a, b in zip(times, times[1:]))
+        # staleness clocks: committed clients are stamped with a round id
+        assert np.asarray(res.final_state.last_sync).max() > 0
+
+    def test_async_scan_matches_host_loop(self, small_data, mlp_params):
+        accs = {}
+        for use_scan in (True, False):
+            cfg = FedSimConfig(
+                fraction=0.25, batch_size=8, local_epochs=1, lr=0.1,
+                max_rounds=5, eval_every=2, use_scan=use_scan,
+                aggregation=AggregationConfig(
+                    criteria=("staleness", "Ds", "Ld", "Md"),
+                    priority=(0, 1, 2, 3)),
+                scenario=ScenarioConfig(preset="tiered-fleet", seed=1),
+                strategy=BufferedAsyncStrategy(buffer_size=6),
+            )
+            sim = FederatedSimulation(small_data, mlp_params, mlp_loss,
+                                      mlp_accuracy, cfg)
+            res = sim.run(targets=(0.99,), device_fracs=(0.99,),
+                          verbose=False)
+            accs[use_scan] = [m.global_acc for m in res.metrics]
+        np.testing.assert_allclose(accs[True], accs[False], atol=1e-5)
+
+    def test_registry_extension_criterion_in_simulation(self, small_data,
+                                                        mlp_params):
+        """Registry-registered criteria beyond Ds/Ld/Md work in the
+        simulation path (the old local alias map raised KeyError)."""
+        cfg = FedSimConfig(
+            fraction=0.25, batch_size=8, local_epochs=1, lr=0.1,
+            max_rounds=2,
+            aggregation=AggregationConfig(
+                criteria=("Ds", "compute_capability", "availability"),
+                priority=(0, 1, 2)),
+            scenario=ScenarioConfig(preset="tiered-fleet", seed=0),
+        )
+        sim = FederatedSimulation(small_data, mlp_params, mlp_loss,
+                                  mlp_accuracy, cfg)
+        res = sim.run(targets=(0.99,), device_fracs=(0.99,), verbose=False)
+        assert all(np.isfinite(m.global_acc) for m in res.metrics)
+
+
+# ---------------------------------------------------------------------------
+# sampler avoid-mask
+# ---------------------------------------------------------------------------
+
+class TestSamplerAvoid:
+    def test_avoided_clients_not_selected(self):
+        avoid = jnp.zeros((12,)).at[jnp.asarray([1, 5, 9])].set(1.0)
+        for seed in range(6):
+            sel = np.asarray(sample_clients_jax(jax.random.key(seed), 12, 6,
+                                                avoid=avoid))
+            assert not ({1, 5, 9} & set(sel.tolist()))
+
+    def test_avoid_yields_full_round_when_needed(self):
+        # only 3 unavoided clients but n=5: avoided ones fill the gap
+        avoid = jnp.ones((8,)).at[jnp.asarray([0, 1, 2])].set(0.0)
+        sel = np.asarray(sample_clients_jax(jax.random.key(0), 8, 5,
+                                            avoid=avoid))
+        assert len(set(sel.tolist())) == 5
+        assert {0, 1, 2} <= set(sel.tolist())
+
+    def test_avoid_composes_with_weights(self):
+        w = jnp.asarray([1.0] * 6, jnp.float32)
+        avoid = jnp.zeros((6,)).at[3].set(1.0)
+        for seed in range(4):
+            sel = np.asarray(sample_clients_jax(jax.random.key(seed), 6, 3,
+                                                weights=w, avoid=avoid))
+            assert 3 not in set(sel.tolist())
+
+
+# ---------------------------------------------------------------------------
+# staleness property: weight non-increasing in staleness, all else equal
+# ---------------------------------------------------------------------------
+
+ASYNC_CFG = AggregationConfig(criteria=("staleness", "Ds", "Ld", "Md"),
+                              priority=(0, 1, 2, 3))
+
+
+def _weight_of_client0(stale0: float, others=(1.0, 2.0, 3.0)) -> float:
+    """Client 0's aggregation weight as a function of its own staleness,
+    with every other criterion fixed and uniform."""
+    stale = jnp.asarray([stale0, *others], jnp.float32)
+    raw = jax.vmap(
+        lambda s: get_criterion("staleness")(ClientContext(staleness=s))
+    )(stale)
+    c_st = normalize_criteria(raw)
+    K = stale.shape[0]
+    uniform = jnp.full((K,), 1.0 / K)
+    c = jnp.stack([c_st, uniform, uniform, uniform], axis=1)
+    p = compute_weights(c, ASYNC_CFG, (0, 1, 2, 3))
+    return float(p[0])
+
+
+class TestStalenessProperty:
+    @settings(max_examples=30)
+    @given(st.floats(0.0, 50.0), st.floats(0.0, 50.0))
+    def test_weight_monotone_nonincreasing_in_staleness(self, s, delta):
+        assert _weight_of_client0(s + delta) <= _weight_of_client0(s) + 1e-7
+
+    def test_fresh_beats_stale(self):
+        assert _weight_of_client0(0.0) > _weight_of_client0(10.0)
+
+    def test_equal_staleness_uniform(self):
+        p = _weight_of_client0(1.0, others=(1.0, 1.0, 1.0))
+        np.testing.assert_allclose(p, 0.25, rtol=1e-6)

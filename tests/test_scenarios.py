@@ -12,6 +12,7 @@ from repro.federated.scenarios import (
     PRESETS,
     DeviceFleet,
     ScenarioConfig,
+    completion_time,
     make_fleet,
     participation,
 )
@@ -143,6 +144,46 @@ class TestParticipation:
         ]
         # half the period on, half off, contiguous from phase 0
         assert on == [1.0] * 12 + [0.0] * 12
+
+
+class TestCompletionTime:
+    def _fleet(self, slowdown, n=6):
+        return DeviceFleet(
+            tier=jnp.zeros((n,), jnp.int32),
+            slowdown=jnp.full((n,), slowdown, jnp.float32),
+            dropout_prob=jnp.zeros((n,), jnp.float32),
+            duty_cycle=jnp.ones((n,), jnp.float32),
+            phase=jnp.zeros((n,), jnp.int32),
+        )
+
+    def test_positive_and_deterministic(self):
+        fleet = make_fleet(ScenarioConfig(preset="tiered-fleet", seed=2), 32)
+        sel = jnp.arange(8)
+        a = completion_time(fleet, sel, jax.random.key(7))
+        b = completion_time(fleet, sel, jax.random.key(7))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert (np.asarray(a) > 0).all()
+
+    def test_scales_exactly_with_slowdown(self):
+        """Same jitter stream: a 4x-slower fleet takes exactly 4x longer."""
+        sel = jnp.arange(6)
+        key = jax.random.key(0)
+        dt1 = completion_time(self._fleet(1.0), sel, key)
+        dt4 = completion_time(self._fleet(4.0), sel, key)
+        np.testing.assert_allclose(np.asarray(dt4), 4.0 * np.asarray(dt1),
+                                   rtol=1e-6)
+
+    def test_base_and_jitter_knobs(self):
+        sel = jnp.arange(6)
+        key = jax.random.key(1)
+        dt = completion_time(self._fleet(1.0), sel, key, base=2.0, jitter=0.0)
+        np.testing.assert_allclose(np.asarray(dt), 2.0, rtol=1e-6)
+
+    def test_jit_safe(self):
+        fleet = self._fleet(2.0)
+        dt = jax.jit(lambda k: completion_time(fleet, jnp.arange(6), k))(
+            jax.random.key(3))
+        assert dt.shape == (6,)
 
 
 class TestScenarioSimulation:
