@@ -1,6 +1,7 @@
-"""Round-loop benchmark: dispatch modes x aggregation strategies.
+"""Round-loop benchmark: dispatch modes x strategies x selection policies.
 
-Two sections, both on the same synthetic workload:
+Three sections, all on the same synthetic workload (see
+``benchmarks/README.md`` for the metric schema and sim-time units):
 
 * **Dispatch** — steady-state rounds/sec of the engine's two execution
   modes (``use_scan=True``: ``eval_every`` rounds lowered as ONE XLA
@@ -15,6 +16,14 @@ Two sections, both on the same synthetic workload:
   staleness feeding the prioritized multi-criteria weights — so async
   reaches the target in fewer simulated-time units even when it needs
   more rounds.
+* **Selection** — the pluggable policy sweep (policy x strategy on
+  ``tiered-fleet``): uniform / availability-bias / deadline-aware Gumbel
+  top-k / oracle, each under sync and buffered-async aggregation.  The
+  headline is the sync column: deadline-aware selection shrinks the
+  straggler barrier (slow tiers are rarely drawn, the staleness bonus
+  bounds the coverage loss) and cuts virtual time-to-target vs the
+  uniform draw; the oracle shows the barrier floor of selecting on true
+  completion times — and the accuracy collapse of pure fastest-first.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmark harness
 contract); :func:`main` also returns the results as a dict, which
@@ -22,18 +31,26 @@ contract); :func:`main` also returns the results as a dict, which
 keeps per-round compute light so dispatch/strategy overheads — what this
 benchmark isolates — dominate; the same blocks drive the paper CNN
 unchanged.
+
+``python benchmarks/roundloop.py --smoke`` runs a seconds-scale slice of
+every section (CI keeps the bench path compiling without paying the full
+sweep).
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 
 from repro.core import AggregationConfig
 from repro.data.synthetic import make_synth_femnist
-from repro.federated import BufferedAsyncStrategy, ScenarioConfig
+from repro.federated import BufferedAsyncStrategy, ScenarioConfig, make_policy
 from repro.federated.simulation import FederatedSimulation, FedSimConfig
 from repro.models.mlp import init_mlp_params, mlp_accuracy, mlp_loss
+
+#: the selection sweep grid — every policy under both aggregation modes
+POLICY_SWEEP = ("uniform", "bias", "deadline", "oracle")
 
 
 def _make_sim(data, params, use_scan: bool, rounds: int, block: int):
@@ -66,13 +83,15 @@ def bench_pair(data, params, rounds: int, block: int,
     return best[False], best[True]
 
 
-def _strategy_cfg(name: str, rounds: int, block: int) -> FedSimConfig:
+def _strategy_cfg(name: str, rounds: int, block: int,
+                  selection=None) -> FedSimConfig:
     if name == "sync":
         return FedSimConfig(
             fraction=0.25, batch_size=10, local_epochs=1, lr=0.1,
             max_rounds=rounds, eval_every=block,
             aggregation=AggregationConfig(priority=(2, 0, 1)),
             scenario=ScenarioConfig(preset="tiered-fleet", seed=0),
+            selection=selection,
         )
     if name == "async":
         # staleness leads the priority order: late arrivals from the slow
@@ -85,8 +104,55 @@ def _strategy_cfg(name: str, rounds: int, block: int) -> FedSimConfig:
                 priority=(0, 1, 2, 3)),
             scenario=ScenarioConfig(preset="tiered-fleet", seed=0),
             strategy=BufferedAsyncStrategy(buffer_size=12),
+            selection=selection,
         )
     raise KeyError(name)
+
+
+def _run_to_target(data, params, cfg: FedSimConfig,
+                   target_acc: float) -> dict:
+    """One simulation run, summarized on the virtual clock."""
+    sim = FederatedSimulation(data, params, mlp_loss, mlp_accuracy, cfg)
+    res = sim.run(targets=(target_acc,), device_fracs=(0.99,), verbose=False)
+    n_rounds = res.metrics[-1].round
+    hit = next(((m.round, m.sim_time) for m in res.metrics
+                if m.global_acc >= target_acc), None)
+    return {
+        "rounds_run": n_rounds,
+        "final_acc": res.metrics[-1].global_acc,
+        "best_acc": max(m.global_acc for m in res.metrics),
+        "commits": res.metrics[-1].commits,
+        "sim_time_total": res.metrics[-1].sim_time,
+        "rounds_to_target": hit[0] if hit else None,
+        "sim_time_to_target": hit[1] if hit else None,
+    }
+
+
+def bench_selection(data, params, rounds: int, block: int,
+                    target_acc: float = 0.75, reuse: dict = None) -> dict:
+    """Policy x strategy sweep on ``tiered-fleet``: virtual time (and
+    rounds) to ``target_acc`` for every selection policy under both the
+    sync barrier and buffered-async aggregation.
+
+    ``reuse`` takes :func:`bench_strategies` output run on the same
+    workload/rounds/block: an explicit ``UniformPolicy`` is trajectory-
+    identical to the default selection those runs used, so the uniform
+    rows are copied instead of re-simulated.
+    """
+    out = {}
+    for pname in POLICY_SWEEP:
+        for sname in ("sync", "async"):
+            if reuse is not None and pname == "uniform":
+                out[f"{pname}/{sname}"] = {
+                    k: v for k, v in reuse[sname].items()
+                    if k != "rounds_per_sec"
+                }
+                continue
+            cfg = _strategy_cfg(sname, rounds, block,
+                                selection=make_policy(pname))
+            out[f"{pname}/{sname}"] = _run_to_target(data, params, cfg,
+                                                     target_acc)
+    return out
 
 
 def bench_strategies(data, params, rounds: int, block: int,
@@ -95,8 +161,8 @@ def bench_strategies(data, params, rounds: int, block: int,
     time (and rounds) until ``target_acc`` global accuracy."""
     out = {}
     for name in ("sync", "async"):
-        sim = FederatedSimulation(data, params, mlp_loss, mlp_accuracy,
-                                  _strategy_cfg(name, rounds, block))
+        cfg = _strategy_cfg(name, rounds, block)
+        sim = FederatedSimulation(data, params, mlp_loss, mlp_accuracy, cfg)
         # warmup: compile the scan block + eval outside the timed window
         # (same protocol as bench_pair's rep 0)
         sim.run(targets=(target_acc,), device_fracs=(0.99,), verbose=False)
@@ -123,16 +189,24 @@ def bench_strategies(data, params, rounds: int, block: int,
 
 def main(clients: int = 64, rounds: int = 64, block: int = 16,
          strat_clients: int = 32, strat_rounds: int = 200,
-         target_acc: float = 0.75) -> dict:
+         target_acc: float = 0.75, smoke: bool = False) -> dict:
+    if smoke:
+        # CI slice: one compile + a handful of rounds per section, just
+        # enough to prove every bench path still lowers and runs.
+        clients, rounds, block = 16, 8, 4
+        strat_clients, strat_rounds = 16, 12
     data = make_synth_femnist(num_clients=clients, mean_samples=12, seed=0)
     params = init_mlp_params(jax.random.key(0), hidden=32)
 
-    rps_host, rps_scan = bench_pair(data, params, rounds, block)
+    rps_host, rps_scan = bench_pair(data, params, rounds, block,
+                                    repeats=1 if smoke else 3)
 
     sdata = make_synth_femnist(num_clients=strat_clients, mean_samples=30,
                                seed=0)
     sparams = init_mlp_params(jax.random.key(0), hidden=48)
     strat = bench_strategies(sdata, sparams, strat_rounds, 10, target_acc)
+    selection = bench_selection(sdata, sparams, strat_rounds, 10,
+                                target_acc, reuse=strat)
 
     rows = [
         ("roundloop_host_us_per_round", 1e6 / rps_host,
@@ -154,6 +228,14 @@ def main(clients: int = 64, rounds: int = 64, block: int = 16,
             else -1.0,
             f"round {s['rounds_to_target']}, best_acc={s['best_acc']:.3f}",
         ))
+    for key, s in selection.items():
+        pname, sname = key.split("/")
+        rows.append((
+            f"roundloop_sel_{pname}_{sname}_simtime_to_{target_acc:.2f}",
+            s["sim_time_to_target"] if s["sim_time_to_target"] is not None
+            else -1.0,
+            f"round {s['rounds_to_target']}, best_acc={s['best_acc']:.3f}",
+        ))
     for name, val, derived in rows:
         print(f"{name},{val:.2f},{derived}")
 
@@ -170,8 +252,18 @@ def main(clients: int = 64, rounds: int = 64, block: int = 16,
             "clients": strat_clients, "max_rounds": strat_rounds,
             **strat,
         },
+        "selection": {
+            "preset": "tiered-fleet",
+            "target_acc": target_acc,
+            "clients": strat_clients, "max_rounds": strat_rounds,
+            "policies": list(POLICY_SWEEP),
+            **selection,
+        },
     }
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI slice of every section")
+    main(smoke=ap.parse_args().smoke)

@@ -23,8 +23,17 @@ the async win — e.g. at defaults async reaches 0.60 global accuracy in
 ~84 simulated-time units vs ~153 for sync (sync's 120 rounds cost 459
 time units; async's cost 146).
 
+``--policy`` swaps the client-selection policy under every strategy
+(``repro.federated.selection``): ``uniform`` (the paper's draw),
+``bias`` (availability-weighted), ``deadline`` (Gumbel top-k over
+predicted completion time + staleness — shrinks the sync barrier on
+tiered fleets), ``oracle`` (true sampled completion times, the
+barrier's lower bound).
+
     PYTHONPATH=src python examples/async_fleet.py --rounds 120
     PYTHONPATH=src python examples/async_fleet.py --preset tiered-fleet
+    PYTHONPATH=src python examples/async_fleet.py --preset tiered-fleet \\
+        --policy deadline
 """
 from __future__ import annotations
 
@@ -40,7 +49,9 @@ from repro.federated import (
     BufferedAsyncStrategy,
     FedAvgStrategy,
     ScenarioConfig,
+    make_policy,
 )
+from repro.federated.selection import POLICIES
 from repro.federated.simulation import FederatedSimulation, FedSimConfig
 from repro.models.mlp import init_mlp_params, mlp_accuracy, mlp_loss
 
@@ -49,7 +60,7 @@ def _config(name: str, args) -> FedSimConfig:
     scenario = ScenarioConfig(preset=args.preset, seed=args.fleet_seed)
     common = dict(fraction=0.25, batch_size=10, local_epochs=1, lr=0.1,
                   max_rounds=args.rounds, eval_every=args.block,
-                  scenario=scenario)
+                  scenario=scenario, selection=make_policy(args.policy))
     if name == "sync":
         return FedSimConfig(
             aggregation=AggregationConfig(priority=(2, 0, 1)), **common)
@@ -77,6 +88,9 @@ def main() -> None:
     ap.add_argument("--buffer", type=int, default=18,
                     help="async buffer size (arrivals per commit)")
     ap.add_argument("--preset", default="flaky-network")
+    ap.add_argument("--policy", default="uniform", choices=sorted(POLICIES),
+                    help="client-selection policy (see "
+                         "repro.federated.selection)")
     ap.add_argument("--fleet-seed", type=int, default=0)
     ap.add_argument("--target", type=float, default=0.6)
     ap.add_argument("--out", default="checkpoints/async_fleet.json")

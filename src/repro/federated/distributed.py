@@ -142,7 +142,11 @@ def make_federated_train_step(
     (``repro.federated.scenarios.participation``): 0 excludes a client
     from criteria normalization and the weighted psum, fractional values
     down-weight stragglers; an all-dropped round degenerates to a no-op
-    update (all weights 0).
+    update (all weights 0).  The same argument is how client *selection*
+    reaches the mesh: ``repro.federated.selection.round_participation``
+    scatters any :class:`~repro.federated.selection.SelectionPolicy`'s
+    pick into this ``[K]`` gate, so deadline-aware/bias/oracle policies
+    drive Mode-B rounds exactly like the single-host engine.
     ``with_staleness=True`` appends a ``staleness`` argument: the ``[K]``
     per-client rounds-since-last-sync vector (the engine's
     ``ServerState.last_sync`` clocks), measured through the registered

@@ -68,6 +68,20 @@ EvalFn = Callable[[PyTree], jax.Array]
 class ServerState:
     """The engine's scan carry — everything the server remembers.
 
+    Shapes (``K`` = fleet size, fixed at ``init_state``; everything is a
+    traced array, nothing here is static under jit):
+
+    * ``params``        — global model pytree ``w_G``
+    * ``quality``       — Algorithm-1 previous round quality (f32 scalar)
+    * ``priority_idx``  — index into ``all_permutations`` (i32 scalar)
+    * ``last_sync``     — ``[K]`` i32, round of each client's last
+      committed sync; ``rnd - last_sync[k]`` is client ``k``'s staleness
+      and also feeds :class:`~repro.federated.selection.
+      DeadlineAwarePolicy`'s fairness bonus
+    * ``sim_time``      — virtual clock (f32 scalar, time units — see
+      ``benchmarks/README.md``)
+    * ``commits``       — global updates committed so far (i32 scalar)
+
     Buffer fields are ``None`` for strategies that never buffer (sync,
     fedavg); ``None`` children are empty pytree subtrees, so the same
     carry structure threads through ``lax.scan`` for every strategy.
@@ -98,7 +112,15 @@ class ServerState:
 
 @dataclass
 class RoundInputs:
-    """One round's client-side products, handed to the strategy."""
+    """One round's client-side products, handed to the strategy.
+
+    ``S`` is the round size (static under jit); ``m`` the number of
+    criteria in ``AggregationConfig.criteria``.  ``mask`` is binary
+    participation (scenario availability x upload survival x in-flight
+    eligibility); ``contrib = mask / slowdown`` additionally down-weights
+    stragglers and is what aggregation weights see.  An all-zero ``mask``
+    round must be (and is, for every built-in strategy) a no-op.
+    """
 
     rnd: jax.Array        # round id (i32 scalar)
     sel: jax.Array        # [S] selected client indices
@@ -147,6 +169,15 @@ class AggregationStrategy:
     def step(self, state: ServerState, inp: RoundInputs,
              cfg: AggregationConfig, online_adjust: bool,
              eval_fn: EvalFn) -> Tuple[ServerState, dict]:
+        """One engine tick: fold a round's client products into the carry.
+
+        ``cfg`` and ``online_adjust`` are static under jit (they shape
+        the traced program); ``state``/``inp`` are traced.  Must be pure
+        jnp — it runs inside ``lax.scan``.  Returns the new carry plus a
+        per-round metrics dict (``entropy``, ``priority_idx``,
+        ``backtracked``, ``num_evaluated``) that the driver stacks per
+        scan block.
+        """
         raise NotImplementedError
 
 

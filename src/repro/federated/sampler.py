@@ -11,9 +11,50 @@ The paper uses uniform sampling of a fixed fraction (10%).  Two samplers:
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+#: log-space penalty soft-excluding avoided clients from a top-k draw.
+#: :func:`soft_avoid` adds the current score *spread* on top, so after
+#: shifting, every avoided entry sits at least this far below every
+#: eligible one regardless of score scale: ``P(Gumbel flip > 60) ~
+#: e^-60``, i.e. an avoided client outranks an eligible one only when
+#: fewer than ``n`` eligible clients remain (soft exclusion with
+#: backfill — the contract shared by every selection path).
+AVOID_PENALTY = 60.0
+
+
+def soft_avoid(scores: jax.Array,
+               avoid: Optional[jax.Array]) -> jax.Array:
+    """Shift avoided entries below every eligible score, scale-free."""
+    if avoid is None:
+        return scores
+    spread = jnp.max(scores) - jnp.min(scores)
+    return scores - (AVOID_PENALTY + spread) * jnp.asarray(avoid,
+                                                           jnp.float32)
+
+
+def gumbel_top_k(
+    key: jax.Array, log_scores: jax.Array, n: int,
+    avoid: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Without-replacement draw of ``n`` indices ∝ ``exp(log_scores)``.
+
+    The Gumbel top-k trick: perturb log-scores with i.i.d. Gumbel noise
+    and keep the ``n`` largest.  ``avoid`` soft-excludes with backfill
+    (:func:`soft_avoid`); ``n`` is clamped to the population size.
+    Returns sorted ``[min(n, K)]`` int32.  The single draw primitive
+    behind both the weighted sampler path and every score-based
+    :class:`~repro.federated.selection.SelectionPolicy`.
+    """
+    n = min(int(n), int(log_scores.shape[0]))
+    log_scores = soft_avoid(log_scores, avoid)
+    g = jax.random.gumbel(key, log_scores.shape)
+    _, idx = jax.lax.top_k(log_scores + g, n)
+    return jnp.sort(idx.astype(jnp.int32))
 
 
 def sample_clients(
@@ -30,8 +71,9 @@ def sample_clients(
 
 
 def num_selected(num_clients: int, fraction: float) -> int:
-    """Round-size shared by both samplers: ``max(1, round(f * K))``."""
-    return max(1, int(round(fraction * num_clients)))
+    """Round-size shared by both samplers: ``max(1, round(f * K))``,
+    clamped to the fleet size (``fraction > 1`` cannot over-draw)."""
+    return max(1, min(num_clients, int(round(fraction * num_clients))))
 
 
 def sample_clients_jax(
@@ -39,26 +81,32 @@ def sample_clients_jax(
     weights: jax.Array | None = None,
     avoid: jax.Array | None = None,
 ) -> jax.Array:
-    """Sample ``n`` distinct clients on device (sorted ``[n]`` int32).
+    """Sample ``min(n, K)`` distinct clients on device (sorted int32).
 
     Uniform selection is a truncated ``jax.random.permutation``; weighted
     selection perturbs log-weights with Gumbel noise and takes the top-k
     (equivalent to without-replacement sampling proportional to weights).
 
+    ``n`` is clamped to ``num_clients`` (both are static Python ints, so
+    the clamp happens at trace time): asking for more distinct clients
+    than exist used to *silently* return a short uniform draw — and crash
+    the weighted path, whose ``top_k`` cannot over-draw.
+
     ``avoid`` is an optional ``[K]`` mask of clients to keep out of the
     draw — e.g. the async engine's in-flight clients, whose updates are
-    still buffered.  Avoided clients get a vanishing (not zero) weight,
-    so they are selected only when fewer than ``n`` others remain.
+    still buffered.  Exclusion is *soft with backfill*
+    (:func:`soft_avoid`): avoided clients are shifted below every
+    eligible score, so the draw always returns exactly ``min(n, K)``
+    distinct clients and avoided ones appear only when fewer than ``n``
+    eligible clients remain.  Callers that must not re-run an in-flight
+    client (rather than merely deprioritize it) should additionally gate
+    the round's participation mask by eligibility — the simulation round
+    loop does exactly that, which is what makes an all-in-flight round a
+    no-op.
     """
+    n = min(int(n), int(num_clients))
     if weights is None and avoid is None:
         return jnp.sort(jax.random.permutation(key, num_clients)[:n])
     w = (jnp.ones((num_clients,), jnp.float32) if weights is None
          else jnp.asarray(weights, jnp.float32))
-    if avoid is not None:
-        # floor is relative to the weight scale so soft exclusion stays
-        # ~certain even when the caller's weights are tiny (unnormalized)
-        w = w * (1.0 - jnp.asarray(avoid, jnp.float32)) + 1e-9 * jnp.max(w)
-    g = jax.random.gumbel(key, (num_clients,))
-    scores = jnp.log(jnp.maximum(w, 1e-12)) + g
-    _, idx = jax.lax.top_k(scores, n)
-    return jnp.sort(idx.astype(jnp.int32))
+    return gumbel_top_k(key, jnp.log(jnp.maximum(w, 1e-12)), n, avoid)

@@ -48,6 +48,12 @@ import jax.numpy as jnp
 #: tier index -> straggler slowdown multiplier (local work per wall-clock).
 TIER_SLOWDOWN = (1.0, 2.0, 4.0)
 
+#: completion-time model defaults (``dt = base * slowdown * exp(jitter *
+#: eps)``) — shared with the oracle selection policy so "true dt" there
+#: means the same distribution the engine's virtual clock charges.
+COMPLETION_BASE = 1.0
+COMPLETION_JITTER = 0.25
+
 
 @dataclass(frozen=True)
 class ScenarioConfig:
@@ -157,6 +163,15 @@ def _tiered_fleet(key, n: int, period: int) -> DeviceFleet:
     )
 
 
+#: preset name -> fleet sampler ``(key, num_clients, period) -> DeviceFleet``:
+#:   * ``uniform``       — identity fleet: always on, no dropout, 1x compute
+#:     (reproduces mask-free runs bit for bit — the golden-test preset)
+#:   * ``mobile-heavy``  — 80% phones: 0.3-0.7 duty cycles, 10% dropout,
+#:     2-4x slowdowns
+#:   * ``flaky-network`` — uniform compute, always on, Beta(1,3)-tailed
+#:     per-round upload loss (up to ~0.8)
+#:   * ``tiered-fleet``  — 50/30/20% compute tiers (1x/2x/4x) with dropout
+#:     and duty cycle degrading by tier — the straggler-barrier benchmark
 PRESETS: Dict[str, object] = {
     "uniform": _uniform,
     "mobile-heavy": _mobile_heavy,
@@ -180,8 +195,8 @@ def completion_time(
     fleet: DeviceFleet,
     sel: jax.Array,
     key: jax.Array,
-    base: float = 1.0,
-    jitter: float = 0.25,
+    base: float = COMPLETION_BASE,
+    jitter: float = COMPLETION_JITTER,
 ) -> jax.Array:
     """Per-selected-client virtual completion time ``dt[S]`` (time units).
 

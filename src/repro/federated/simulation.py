@@ -3,7 +3,11 @@
 Implements the experimental protocol of §3 end-to-end on one host:
 
 * a server holding the global model ``w_G``,
-* per-round uniform client sampling (fraction 0.1),
+* per-round client selection through a pluggable
+  :class:`~repro.federated.selection.SelectionPolicy` — the paper's
+  uniform draw (fraction 0.1) by default; availability-biased,
+  deadline-aware Gumbel top-k and oracle policies are available and run
+  inside the same jitted round step,
 * per-client local SGD (batch 10, 5 local epochs, lr 0.01) — run for *all*
   selected clients at once via ``vmap(lax.scan(...))``,
 * criteria measurement through the ``core.criteria`` registry (Ds / Ld /
@@ -55,7 +59,7 @@ from repro.federated.engine import (
     ServerState,
     SyncStrategy,
 )
-from repro.federated.sampler import num_selected, sample_clients_jax
+from repro.federated.sampler import num_selected
 from repro.federated.scenarios import (
     DeviceFleet,
     ScenarioConfig,
@@ -63,12 +67,27 @@ from repro.federated.scenarios import (
     make_fleet,
     participation,
 )
+from repro.federated.selection import (
+    BiasPolicy,
+    SelectionContext,
+    SelectionPolicy,
+    UniformPolicy,
+)
 from repro.optim.optimizers import sgd
 from repro.utils.pytree import PyTree
 
 
 @dataclass
 class FedSimConfig:
+    """Simulation hyper-parameters.  Every field is static under jit —
+    changing any of them recompiles the round block.
+
+    ``selection=None`` resolves to :class:`UniformPolicy` (the paper's
+    uniform draw), or :class:`BiasPolicy` when the scenario sets the
+    legacy ``bias_sampling=True`` flag; ``strategy=None`` resolves to
+    :class:`SyncStrategy` (the paper's synchronous round).
+    """
+
     fraction: float = 0.1          # paper: 10% of clients per round
     batch_size: int = 10           # paper: B = 10
     local_epochs: int = 5          # paper: E = 5
@@ -81,6 +100,7 @@ class FedSimConfig:
     scenario: Optional[ScenarioConfig] = None  # device-heterogeneity preset
     use_scan: bool = True          # False: host-driven per-round dispatch
     strategy: Optional[AggregationStrategy] = None  # None -> SyncStrategy()
+    selection: Optional[SelectionPolicy] = None     # None -> UniformPolicy()
 
 
 @dataclass
@@ -149,6 +169,17 @@ class FederatedSimulation:
             make_fleet(config.scenario, data.num_clients)
             if config.scenario is not None else None
         )
+        if config.selection is not None:
+            self.policy: SelectionPolicy = config.selection
+        elif config.scenario is not None and config.scenario.bias_sampling:
+            self.policy = BiasPolicy()     # legacy bias_sampling flag
+        else:
+            self.policy = UniformPolicy()
+        if self.policy.requires_fleet and self.fleet is None:
+            raise ValueError(
+                f"{type(self.policy).__name__} requires a device fleet — "
+                "set FedSimConfig.scenario"
+            )
         self._base_key = jax.random.key(config.seed)
         self._perms = all_permutations(config.aggregation.num_criteria())
         self._prio_init = self._perms.index(tuple(config.aggregation.priority))
@@ -237,13 +268,10 @@ class FederatedSimulation:
         cfg = self.cfg
         fleet = self.fleet
         strategy = self.strategy
+        policy = self.policy
         S = self._num_sel
         opt = sgd(cfg.lr)
         loss_fn = self.loss_fn
-        sel_weights = (
-            fleet.expected_availability()
-            if (fleet is not None and cfg.scenario.bias_sampling) else None
-        )
 
         def one_client(global_params, images, labels, plan):
             opt_state = opt.init(global_params)
@@ -271,11 +299,11 @@ class FederatedSimulation:
             k_time = jax.random.fold_in(key, 3)
 
             avoid = strategy.avoid_mask(state)
-            if avoid is None and sel_weights is None:
-                sel = sample_clients_jax(k_sel, self.data.num_clients, S)
-            else:
-                sel = sample_clients_jax(k_sel, self.data.num_clients, S,
-                                         sel_weights, avoid=avoid)
+            sel, dt_policy = policy.select(SelectionContext(
+                key=k_sel, num_clients=self.data.num_clients, n=S, rnd=rnd,
+                last_sync=state.last_sync, fleet=fleet, avoid=avoid,
+                time_key=k_time,
+            ))
             plans = device_batch_plans(k_batch, self.counts[sel],
                                        self._fixed_steps, cfg.batch_size)
             stacked = local_train(params, self.images[sel], self.labels[sel],
@@ -283,9 +311,18 @@ class FederatedSimulation:
 
             if fleet is not None:
                 mask, contrib = participation(fleet, sel, rnd, k_scen)
-                dt = completion_time(fleet, sel, k_time)
+                dt = (dt_policy if dt_policy is not None
+                      else completion_time(fleet, sel, k_time))
             else:
-                mask = contrib = dt = jnp.ones((S,), jnp.float32)
+                mask = contrib = jnp.ones((S,), jnp.float32)
+                dt = dt_policy if dt_policy is not None else mask
+            if avoid is not None:
+                # Soft-excluded in-flight clients can backfill a thin draw,
+                # but must not contribute twice: gate them out of the wave
+                # entirely.  All clients in flight -> a no-op round.
+                elig = 1.0 - avoid[sel]
+                mask = mask * elig
+                contrib = contrib * elig
 
             c = self._measure_criteria(stacked, sel, params, mask,
                                        state.last_sync, rnd)
@@ -319,6 +356,21 @@ class FederatedSimulation:
         log_every: int = 10,
         verbose: bool = True,
     ) -> SimResult:
+        """Drive up to ``cfg.max_rounds`` rounds and evaluate every block.
+
+        Rounds run in ``cfg.eval_every``-sized ``lax.scan`` blocks (one
+        XLA dispatch per block; ``use_scan=False`` keeps a host-driven
+        per-round loop with an identical trajectory).  After each block
+        the global model is evaluated on every client's local test set.
+
+        ``targets`` are global-accuracy goals; ``device_fracs`` are
+        fraction-of-devices goals — ``rounds_to_target[(t, f)]`` records
+        the first round where at least ``f`` of the devices score ≥ ``t``
+        (``None`` if never), and the loop early-stops once every goal is
+        met.  Returns a :class:`SimResult` whose ``metrics`` carry one
+        :class:`RoundMetrics` per eval point, including the virtual-clock
+        reading ``sim_time`` (see ``benchmarks/README.md`` for units).
+        """
         cfg = self.cfg
         block = max(1, cfg.eval_every)
         metrics: List[RoundMetrics] = []

@@ -118,6 +118,20 @@ _SCRIPT = textwrap.dedent("""
         results["participation_renormalizes"] = bool(
             abs(float(w_pm.sum()) - 1.0) < 1e-5)
 
+        # selection-policy bridge: any SelectionPolicy's pick, scattered
+        # by round_participation, drives the same participation gate —
+        # unselected clients get zero weight, survivors renormalize
+        from repro.federated.selection import make_policy, round_participation
+        pol_part = round_participation(make_policy("deadline"),
+                                       jax.random.key(7), 4, 2)
+        _, st_pol = jax.jit(step_pm)(params, batch, pol_part)
+        w_pol = np.asarray(st_pol["weight"])
+        results["policy_mask_selected"] = float(np.asarray(pol_part).sum())
+        results["policy_mask_gates"] = bool(np.allclose(
+            w_pol[np.asarray(pol_part) == 0.0], 0.0, atol=1e-7))
+        results["policy_mask_renormalizes"] = bool(
+            abs(float(w_pol.sum()) - 1.0) < 1e-5)
+
         # all-dropped round: an all-zero participation vector must leave
         # the parameters bit-for-bit untouched (weights all 0 -> agg 0)
         part0 = jnp.zeros((4,), jnp.float32)
@@ -221,6 +235,14 @@ def test_rs_ag_bf16_aggregation_matches(subproc_results):
 def test_participation_mask(subproc_results):
     assert subproc_results["participation_zeroes_dropped"]
     assert subproc_results["participation_renormalizes"]
+
+
+def test_selection_policy_participation_bridge(subproc_results):
+    """round_participation(policy, ...) drives with_participation: the
+    policy picked exactly n clients and the gate zeroes the rest."""
+    assert subproc_results["policy_mask_selected"] == 2.0
+    assert subproc_results["policy_mask_gates"]
+    assert subproc_results["policy_mask_renormalizes"]
 
 
 def test_all_dropped_round_is_param_noop(subproc_results):

@@ -1,0 +1,46 @@
+"""Docs stay navigable: internal markdown links resolve.
+
+The CI docs job runs ``tools/check_links.py`` standalone; this fast-tier
+test runs the same checker in-process so a broken link fails locally
+before a PR ever reaches CI.
+"""
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+import check_links  # noqa: E402
+
+
+def test_readme_and_docs_links_resolve():
+    files = check_links.iter_markdown(check_links.DEFAULT_TARGETS)
+    assert files, "expected README.md / docs/ / benchmarks/ markdown"
+    errors = [e for md in files for e in check_links.check_file(md)]
+    assert not errors, "\n".join(errors)
+
+
+def test_architecture_doc_covers_extension_points():
+    """The acceptance contract: ARCHITECTURE.md documents all three
+    extension points."""
+    path = os.path.join(REPO, "docs", "ARCHITECTURE.md")
+    text = open(path, encoding="utf-8").read().lower()
+    for phrase in ("new criterion", "new aggregation strategy",
+                   "new selection policy"):
+        assert phrase in text, f"ARCHITECTURE.md missing recipe: {phrase!r}"
+
+
+def test_checker_flags_broken_link(tmp_path):
+    md = tmp_path / "x.md"
+    md.write_text("see [here](missing.md) and [ok](https://example.com)")
+    errors = check_links.check_file(md)
+    assert len(errors) == 1 and "missing.md" in errors[0]
+
+
+@pytest.mark.parametrize("target", ["#anchor", "https://x.y", "mailto:a@b"])
+def test_checker_skips_external_and_anchors(tmp_path, target):
+    md = tmp_path / "x.md"
+    md.write_text(f"[t]({target})")
+    assert check_links.check_file(md) == []

@@ -1,0 +1,81 @@
+"""Markdown internal-link checker for the docs CI job.
+
+Scans the given markdown files (default: README.md, docs/, benchmarks/,
+the root *.md set) for inline links and verifies every *internal* target
+resolves to an existing file or directory, relative to the file holding
+the link.  External schemes (http/https/mailto) and pure in-page anchors
+are skipped; a ``path#anchor`` link is checked for the path part only.
+
+    python tools/check_links.py [file-or-dir ...]
+
+Exit code 0 when every link resolves, 1 otherwise (offenders listed).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+#: inline markdown links: [text](target) — images included via the
+#: optional leading "!"; reference-style definitions are rare here and
+#: would surface as broken inline links anyway.
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+DEFAULT_TARGETS = ("*.md", "docs", "benchmarks")
+
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def iter_markdown(targets) -> list[Path]:
+    files: list[Path] = []
+    for t in targets:
+        if "*" in str(t):                      # repo-root glob, e.g. *.md
+            files.extend(sorted(ROOT.glob(str(t))))
+            continue
+        p = (ROOT / t) if not Path(t).is_absolute() else Path(t)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.suffix == ".md" and p.exists():
+            files.append(p)
+    return files
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    text = md.read_text(encoding="utf-8")
+    # fenced code blocks may contain [x](y)-looking text — drop them
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            where = (md.relative_to(ROOT) if md.is_relative_to(ROOT)
+                     else md)
+            errors.append(f"{where}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    targets = argv or list(DEFAULT_TARGETS)
+    files = iter_markdown(targets)
+    if not files:
+        print(f"check_links: no markdown files under {targets}",
+              file=sys.stderr)
+        return 1
+    errors = [e for md in files for e in check_file(md)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_links: {len(files)} files, "
+          f"{len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
