@@ -10,6 +10,7 @@ from repro.core.adjust import AdjustResult, adjust_round, adjust_round_vectorize
 from repro.core.criteria import (
     ClientContext,
     available_criteria,
+    criterion_needs,
     get_criterion,
     measure_criteria,
     normalize_criteria,
@@ -30,7 +31,7 @@ __all__ = [
     "AggregationConfig", "aggregate_models", "aggregate_round",
     "compute_scores", "compute_weights",
     "AdjustResult", "adjust_round", "adjust_round_vectorized",
-    "ClientContext", "available_criteria", "get_criterion",
+    "ClientContext", "available_criteria", "criterion_needs", "get_criterion",
     "measure_criteria", "normalize_criteria", "register_criterion", "resolve",
     "all_permutations", "choquet_score", "owa_score", "prioritized_score",
     "prioritized_weights", "scores_to_weights", "weighted_average_score",

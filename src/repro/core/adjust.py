@@ -121,6 +121,14 @@ def adjust_round_vectorized(
     Eager evaluation of all m! candidates trades FLOPs for zero host
     round-trips — on the mesh each candidate is just one weighted psum of
     scalars plus a cheap re-weighting, so this is the right trade at scale.
+
+    When ``stacked_models`` is the flat ``[K, N]`` client matrix (a bare
+    2-D array is *by contract* the flat representation — see
+    :func:`~repro.core.aggregate.aggregate_models`), the whole candidate
+    sweep collapses to one ``[m!, K] @ [K, N]`` matmul (one streaming
+    pass over the round's models) instead of ``m!`` sequential pytree
+    aggregations; same acceptance rule, float-tolerance-identical
+    candidates.
     """
     perms = operators.all_permutations(cfg.num_criteria())
     n = len(perms)
@@ -130,10 +138,20 @@ def adjust_round_vectorized(
         [compute_weights(c, cfg, perm, mask) for perm in perms], axis=0
     )
 
-    def build_and_eval(w):
-        return eval_fn(aggregate_models(stacked_models, w))
+    flat = isinstance(stacked_models, jax.Array) and stacked_models.ndim == 2
+    if flat:
+        # Flat-vector hot path: all m! candidate aggregates as ONE
+        # [n, K] @ [K, N] matmul — a single streaming pass over the
+        # stacked client matrix instead of n sequential weighted sums.
+        cands = (weights.astype(jnp.float32)
+                 @ stacked_models.astype(jnp.float32)
+                 ).astype(stacked_models.dtype)          # [n, N]
+        qualities = jax.lax.map(eval_fn, cands)          # [n]
+    else:
+        def build_and_eval(w):
+            return eval_fn(aggregate_models(stacked_models, w))
 
-    qualities = jax.lax.map(build_and_eval, weights)  # [n]
+        qualities = jax.lax.map(build_and_eval, weights)  # [n]
 
     cur_q = qualities[current_priority_idx]
     ok = qualities >= prev_quality
@@ -149,7 +167,12 @@ def adjust_round_vectorized(
         jnp.where(any_ok, first_ok, fallback),
     )
     w_chosen = weights[chosen]
-    global_params = aggregate_models(stacked_models, w_chosen)
+    # the flat path already built every candidate in the matmul — pick a
+    # row; the pytree path re-aggregates with the chosen weights
+    if flat:
+        global_params = cands[chosen]
+    else:
+        global_params = aggregate_models(stacked_models, w_chosen)
     return AdjustResult(
         global_params=global_params,
         quality=qualities[chosen],

@@ -5,11 +5,17 @@ per-client criteria evaluations and local models (or updates), computes one
 score per client with an aggregation *operator*, normalizes scores into
 weights ``p^k`` and forms ``w_G = sum_k p^k w^k``.
 
-Two execution paths for the weighted sum:
+Execution paths for the weighted sum:
 
-* pure-jnp :func:`repro.utils.pytree.tree_weighted_sum` (always available)
-* the Pallas ``weighted_agg`` kernel (TPU; interpret-mode on CPU) for the
-  flattened-parameter hot path — selected with ``use_kernel=True``.
+* pure-jnp :func:`repro.utils.pytree.tree_weighted_sum` over stacked
+  pytrees (always available; the bit-for-bit reference path),
+* the flat-vector hot path: when ``stacked`` is a single ``[K, N]``
+  matrix (see :class:`repro.utils.pytree.FlatSpec`), aggregation is one
+  fused weighted reduction dispatched through
+  :func:`repro.kernels.ops.resolve_kernel_mode` — the Pallas
+  ``weighted_agg`` kernel on TPU, a BLAS matvec elsewhere,
+* ``use_kernel=True`` forces the Pallas kernel (per-leaf for pytrees)
+  with the given ``interpret`` mode — the kernel-validation path.
 """
 from __future__ import annotations
 
@@ -96,11 +102,22 @@ def aggregate_models(
 ) -> PyTree:
     """``w_G = sum_k p_k w_k`` over a leading client axis.
 
-    ``stacked`` has leaves ``[K, ...]``; ``weights`` is ``[K]``.
+    ``stacked`` has leaves ``[K, ...]``; ``weights`` is ``[K]``.  A bare
+    ``[K, N]`` matrix is *by contract* the flat-vector representation and
+    takes the fused hot path (backend-aware kernel/matvec dispatch; pass
+    ``use_kernel=True`` to force the Pallas kernel with ``interpret``).
+    The result matches the per-leaf reduction to float tolerance, not bit
+    for bit — a model whose entire pytree is one 1-D vector should be
+    wrapped in a container (e.g. ``{"w": vec}``) if per-leaf
+    ``tree_weighted_sum`` semantics must be preserved exactly.
     """
-    if use_kernel:
-        from repro.kernels import ops as kops
+    from repro.kernels import ops as kops
 
+    if isinstance(stacked, jax.Array) and stacked.ndim == 2:
+        return kops.flat_weighted_agg(
+            stacked, weights, interpret=interpret if use_kernel else None
+        )
+    if use_kernel:
         return kops.tree_weighted_agg(stacked, weights, interpret=interpret)
     return tree_weighted_sum(stacked, weights)
 

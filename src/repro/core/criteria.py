@@ -61,11 +61,12 @@ class ClientContext:
     flops_per_sec: Optional[jax.Array] = None    # declared capability
     staleness: Optional[jax.Array] = None        # rounds since last sync
     availability: Optional[jax.Array] = None     # expected participation [0,1]
+    update_sq_norm: Optional[jax.Array] = None   # precomputed ||w_k - w_G||^2
 
     def tree_flatten(self):
         return (self.num_examples, self.label_counts, self.update,
                 self.global_params, self.expert_counts, self.flops_per_sec,
-                self.staleness, self.availability), None
+                self.staleness, self.availability, self.update_sq_norm), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -84,8 +85,17 @@ def label_diversity(ctx: ClientContext) -> jax.Array:
 
 
 def model_divergence(ctx: ClientContext) -> jax.Array:
-    """Md — phi_k = 1 / sqrt(||w_G - w_k||_2 + 1); rewards small divergence."""
-    nrm = jnp.sqrt(tree_sq_norm(ctx.update))
+    """Md — phi_k = 1 / sqrt(||w_G - w_k||_2 + 1); rewards small divergence.
+
+    Prefers a precomputed ``update_sq_norm`` (the flat-vector hot path
+    streams ``||w_k - w_G||^2`` through ``kernels.flat_divergence_sq``
+    without building an update pytree); falls back to reducing
+    ``ctx.update`` leaf by leaf.
+    """
+    if ctx.update_sq_norm is not None:
+        nrm = jnp.sqrt(jnp.asarray(ctx.update_sq_norm, jnp.float32))
+    else:
+        nrm = jnp.sqrt(tree_sq_norm(ctx.update))
     return 1.0 / jnp.sqrt(nrm + 1.0)
 
 
@@ -124,12 +134,34 @@ def availability(ctx: ClientContext) -> jax.Array:
 CriterionFn = Callable[[ClientContext], jax.Array]
 
 _REGISTRY: Dict[str, CriterionFn] = {}
+_NEEDS: Dict[str, Optional[tuple]] = {}
 
 
-def register_criterion(name: str, fn: CriterionFn) -> None:
+def register_criterion(name: str, fn: CriterionFn,
+                       needs: Optional[tuple] = None) -> None:
+    """Register a criterion, optionally declaring expensive context needs.
+
+    ``needs`` names :class:`ClientContext` fields the criterion cannot run
+    without *and* that are expensive to build (today: ``"update"``, which
+    the round engine only materializes — as an update pytree, or as the
+    streamed ``update_sq_norm`` on the flat path — when some configured
+    criterion declares it).  Cheap fields (counts, clocks, fleet profile)
+    are always provided and need not be declared.
+
+    ``needs=None`` (the default) means *undeclared*: the engine
+    conservatively builds the update context for such criteria on the
+    pytree path (pre-laziness behavior — a criterion reading
+    ``ctx.update`` keeps working), and refuses them on the flat path,
+    where only the streamed ``update_sq_norm`` exists.  Declare
+    ``needs=()`` for update-free criteria to skip the cost, or
+    ``needs=("update",)`` for update consumers (which must accept
+    ``update_sq_norm`` to run on the flat path — see
+    :func:`model_divergence`).
+    """
     if name in _REGISTRY:
         raise ValueError(f"criterion {name!r} already registered")
     _REGISTRY[name] = fn
+    _NEEDS[name] = tuple(needs) if needs is not None else None
 
 
 def get_criterion(name: str) -> CriterionFn:
@@ -138,20 +170,33 @@ def get_criterion(name: str) -> CriterionFn:
     return _REGISTRY[name]
 
 
+def criterion_needs(name: str) -> Optional[tuple]:
+    """Declared expensive-context needs of a registered criterion.
+
+    ``None`` means the criterion was registered without a declaration
+    (callers must treat it conservatively — see
+    :func:`register_criterion`).
+    """
+    canon = resolve(name)
+    if canon not in _REGISTRY:
+        raise KeyError(f"unknown criterion {name!r}; available: {sorted(_REGISTRY)}")
+    return _NEEDS.get(canon)
+
+
 def available_criteria() -> tuple:
     return tuple(sorted(_REGISTRY))
 
 
-for _name, _fn in [
-    ("dataset_size", dataset_size),
-    ("label_diversity", label_diversity),
-    ("model_divergence", model_divergence),
-    ("load_balance", load_balance),
-    ("compute_capability", compute_capability),
-    ("staleness", staleness),
-    ("availability", availability),
+for _name, _fn, _needs in [
+    ("dataset_size", dataset_size, ()),
+    ("label_diversity", label_diversity, ()),
+    ("model_divergence", model_divergence, ("update",)),
+    ("load_balance", load_balance, ()),
+    ("compute_capability", compute_capability, ()),
+    ("staleness", staleness, ()),
+    ("availability", availability, ()),
 ]:
-    register_criterion(_name, _fn)
+    register_criterion(_name, _fn, needs=_needs)
 
 # Short aliases used throughout the paper's tables.
 ALIASES = {"Ds": "dataset_size", "Ld": "label_diversity", "Md": "model_divergence",

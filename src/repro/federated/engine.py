@@ -40,6 +40,14 @@ compares for time-to-target.
 
 Everything here is pure jnp on traced values — strategies run unchanged
 inside ``jax.lax.scan`` round blocks and under jit.
+
+Strategies are *representation-agnostic*: every step is pytree math, so
+the carry's ``params``/``buffer`` may be the model pytree (the default,
+golden-pinned path) or the flat ``[N]`` vector of the hot path
+(``FedSimConfig(flat_params=True)``), in which case ``RoundInputs.stacked``
+is the ``[S, N]`` client matrix, ``aggregate_models`` dispatches to one
+fused weighted reduction, and the async buffer fold is a single matvec —
+no strategy code changes between the two.
 """
 from __future__ import annotations
 
@@ -71,7 +79,8 @@ class ServerState:
     Shapes (``K`` = fleet size, fixed at ``init_state``; everything is a
     traced array, nothing here is static under jit):
 
-    * ``params``        — global model pytree ``w_G``
+    * ``params``        — global model ``w_G`` (pytree, or flat ``[N]``
+      vector under the flat-vector hot path)
     * ``quality``       — Algorithm-1 previous round quality (f32 scalar)
     * ``priority_idx``  — index into ``all_permutations`` (i32 scalar)
     * ``last_sync``     — ``[K]`` i32, round of each client's last

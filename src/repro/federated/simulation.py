@@ -35,6 +35,19 @@ program (eval/metrics hoisted to block boundaries).  ``use_scan=False``
 falls back to a host-driven per-round loop (same round body, same
 trajectory) — kept for A/B benchmarking of the dispatch overhead.
 
+Two server-side representations share that round body:
+
+* the default **pytree path** — per-leaf math, bit-for-bit pinned by the
+  recorded goldens,
+* the **flat-vector hot path** (``FedSimConfig(flat_params=True)``) —
+  client results are raveled to one ``[S, N]`` matrix at the
+  ``local_train`` boundary and the carry holds flat ``[N]`` vectors, so
+  criteria (streaming divergence), aggregation (one fused weighted
+  reduction), the async buffer (one axpy) and the Algorithm-1 candidate
+  sweep (one ``[m!, S] @ [S, N]`` matmul) are single streaming passes
+  dispatched through ``repro.kernels.ops`` (Pallas on TPU, BLAS on CPU).
+  The ``hotpath`` section of ``BENCH_roundloop.json`` tracks the win.
+
 The engine is model-agnostic: it takes ``loss_fn(params, x, y)`` and
 ``acc_fn(params, x, y, mask)`` plus initial params.
 """
@@ -48,11 +61,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import AggregationConfig
-from repro.core.criteria import ClientContext, measure_criteria, resolve
-from repro.core.criteria import normalize_criteria
+from repro.core.criteria import (
+    ClientContext,
+    criterion_needs,
+    measure_criteria,
+    normalize_criteria,
+    resolve,
+)
 from repro.core.operators import all_permutations
 from repro.data.pipeline import device_batch_plans
-from repro.data.synthetic import NUM_CLASSES, FederatedDataset
+from repro.data.synthetic import FederatedDataset
 from repro.federated.engine import (
     AggregationStrategy,
     RoundInputs,
@@ -73,8 +91,9 @@ from repro.federated.selection import (
     SelectionPolicy,
     UniformPolicy,
 )
+from repro.kernels import ops as kops
 from repro.optim.optimizers import sgd
-from repro.utils.pytree import PyTree
+from repro.utils.pytree import FlatSpec, PyTree
 
 
 @dataclass
@@ -86,6 +105,20 @@ class FedSimConfig:
     uniform draw), or :class:`BiasPolicy` when the scenario sets the
     legacy ``bias_sampling=True`` flag; ``strategy=None`` resolves to
     :class:`SyncStrategy` (the paper's synchronous round).
+
+    ``flat_params=True`` selects the flat-vector server hot path: the
+    engine carry holds the global model as one ``[N]`` f32 vector and a
+    round's client results as one ``[S, N]`` matrix, so criteria,
+    aggregation, the async buffer and the Algorithm-1 candidate sweep run
+    as fused streaming passes (kernel-dispatched — see
+    ``docs/ARCHITECTURE.md``).  Numerically equivalent to the default
+    pytree path within float tolerance (regression-tested), but not bit
+    for bit — reduction orders differ — so the golden-pinned default
+    stays ``False``.
+
+    ``donate=True`` donates the :class:`ServerState` carry to each block
+    dispatch, letting XLA reuse the params/buffer storage instead of
+    copying it per call.
     """
 
     fraction: float = 0.1          # paper: 10% of clients per round
@@ -101,6 +134,8 @@ class FedSimConfig:
     use_scan: bool = True          # False: host-driven per-round dispatch
     strategy: Optional[AggregationStrategy] = None  # None -> SyncStrategy()
     selection: Optional[SelectionPolicy] = None     # None -> UniformPolicy()
+    flat_params: bool = False      # flat [S, N] server hot path
+    donate: bool = True            # donate the carry to block dispatches
 
 
 @dataclass
@@ -119,19 +154,15 @@ class RoundMetrics:
 
 @dataclass
 class SimResult:
+    """``final_params`` is always the model *pytree* (unraveled if the run
+    used ``flat_params=True``); ``final_state`` is the raw engine carry —
+    under the flat path its ``params``/buffer fields are flat vectors."""
+
     metrics: List[RoundMetrics]
     final_params: PyTree
     rounds_to_target: Dict[Tuple[float, float], Optional[int]]
     # (target_acc, frac_devices) -> first round achieving it (None if never)
     final_state: Optional[ServerState] = None
-
-
-def _label_histograms(labels: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
-    """[S, max_n] labels + [S] valid counts -> [S, C] label histograms."""
-    S, max_n = labels.shape
-    valid = (jnp.arange(max_n)[None, :] < counts[:, None]).astype(jnp.float32)
-    onehot = jax.nn.one_hot(labels, NUM_CLASSES, dtype=jnp.float32)
-    return jnp.sum(onehot * valid[:, :, None], axis=1)
 
 
 class FederatedSimulation:
@@ -184,6 +215,31 @@ class FederatedSimulation:
         self._perms = all_permutations(config.aggregation.num_criteria())
         self._prio_init = self._perms.index(tuple(config.aggregation.priority))
 
+        # flat-vector hot path: cached ravel/unravel plan for the model
+        self._flat = bool(config.flat_params)
+        self._fspec = FlatSpec(init_params)
+        # Laziness: the expensive update context (an [S, params] pytree, or
+        # its streamed [S] squared norm on the flat path) is only built
+        # when a configured criterion declares it needs updates.  A
+        # criterion registered *without* a needs declaration (needs=None)
+        # is treated conservatively: the pytree path still materializes
+        # updates for it (pre-laziness behavior), and the flat path —
+        # which can only offer the streamed squared norm — refuses it.
+        declared = {n: criterion_needs(n) for n in canon}
+        self._needs_update = any(d is None or "update" in d
+                                 for d in declared.values())
+        if self._flat:
+            undeclared = [n for n, d in declared.items() if d is None]
+            if undeclared:
+                raise ValueError(
+                    "flat_params=True requires criteria registered with an "
+                    f"explicit needs declaration; {undeclared} have none. "
+                    "Re-register with needs=() (no update context) or "
+                    "needs=('update',) — update consumers receive the "
+                    "streamed update_sq_norm on the flat path, not an "
+                    "update pytree (see core.criteria.model_divergence)."
+                )
+
         # device-resident copies of the client shards
         self.images = jnp.asarray(data.images)
         self.labels = jnp.asarray(data.labels)
@@ -191,6 +247,13 @@ class FederatedSimulation:
         self.t_images = jnp.asarray(data.test_images)
         self.t_labels = jnp.asarray(data.test_labels)
         self.t_counts = jnp.asarray(data.test_counts)
+
+        # Static per-client features: the [K, C] label-histogram table is
+        # fixed by the dataset, so one exact integer-count table gathered
+        # by `sel` replaces the per-round [S, max_n, C] one-hot reduction.
+        self._label_table = jnp.asarray(
+            np.stack([data.label_histogram(k)
+                      for k in range(data.num_clients)]), jnp.float32)
 
         max_t = self.t_images.shape[1]
         self._t_mask = (jnp.arange(max_t)[None, :]
@@ -202,16 +265,24 @@ class FederatedSimulation:
             1, int(data.counts.max()) // config.batch_size
         ) * config.local_epochs
 
+        # Donating the ServerState carry lets XLA update params/buffer in
+        # place per block dispatch instead of copying them; run() copies
+        # externally-held buffers into the first carry, so donation never
+        # invalidates caller arrays.
+        donate = (0,) if config.donate else ()
         self._round_step = self._build_round_step()
-        self._run_block = jax.jit(self._build_run_block())
-        self._run_one = jax.jit(self._round_step)
-        self._eval_all = jax.jit(self._eval_global)
+        self._run_block = jax.jit(self._build_run_block(),
+                                  donate_argnums=donate)
+        self._run_one = jax.jit(self._round_step, donate_argnums=donate)
+        self._eval_all = jax.jit(self._eval_params)
 
     # ------------------------------------------------------------------
     def init_state(self) -> ServerState:
-        """Fresh engine carry for the current ``self.params``."""
+        """Fresh engine carry for the current ``self.params`` (flat-path
+        runs carry the raveled ``[N]`` vector)."""
+        params = self._fspec.ravel(self.params) if self._flat else self.params
         return self.strategy.init_state(
-            self.params, self.data.num_clients, self._prio_init
+            params, self.data.num_clients, self._prio_init
         )
 
     # ------------------------------------------------------------------
@@ -222,6 +293,12 @@ class FederatedSimulation:
         )
         w = self.t_counts.astype(jnp.float32)
         return accs, jnp.sum(accs * w) / jnp.sum(w)
+
+    def _eval_params(self, params):
+        """:meth:`_eval_global` accepting either representation."""
+        if self._flat:
+            params = self._fspec.unravel(params)
+        return self._eval_global(params)
 
     def _measure_criteria(
         self, stacked: PyTree, sel: jax.Array, params: PyTree,
@@ -235,11 +312,18 @@ class FederatedSimulation:
         :func:`measure_criteria` is vmapped over it — so any registered
         criterion whose context fields are available here (everything
         except MoE ``expert_counts``) works without touching this module.
+
+        The update context is *lazy*: it is only built when a configured
+        criterion declares ``needs=("update",)``, and on the flat path
+        it is the streamed ``[S]`` squared-norm vector
+        (``kernels.flat_divergence_sq``) rather than an ``[S, params]``
+        update pytree.  ``stacked``/``params`` are the flat ``[S, N]`` /
+        ``[N]`` arrays when ``flat_params=True``, pytrees otherwise.
         """
         names = self.cfg.aggregation.criteria
         fleet = self.fleet
         n_examples = self.counts[sel].astype(jnp.float32)
-        label_counts = _label_histograms(self.labels[sel], self.counts[sel])
+        label_counts = self._label_table[sel]
         stale = (rnd - last_sync[sel]).astype(jnp.float32)
         if fleet is not None:
             flops = 1.0 / fleet.slowdown[sel]      # relative capability
@@ -248,11 +332,17 @@ class FederatedSimulation:
             flops = jnp.ones_like(n_examples)
             avail = jnp.ones_like(n_examples)
 
-        updates = jax.tree.map(lambda s, p: s - p[None], stacked, params)
+        updates = upd_sq = None
+        if self._needs_update:
+            if self._flat:
+                upd_sq = kops.flat_divergence_sq(stacked, params)
+            else:
+                updates = jax.tree.map(lambda s, p: s - p[None],
+                                       stacked, params)
         ctx = ClientContext(
             num_examples=n_examples, label_counts=label_counts,
             update=updates, flops_per_sec=flops, staleness=stale,
-            availability=avail,
+            availability=avail, update_sq_norm=upd_sq,
         )
         raw = jax.vmap(lambda c: measure_criteria(names, c))(ctx)
         return normalize_criteria(raw, mask)
@@ -272,6 +362,8 @@ class FederatedSimulation:
         S = self._num_sel
         opt = sgd(cfg.lr)
         loss_fn = self.loss_fn
+        flat = self._flat
+        fspec = self._fspec
 
         def one_client(global_params, images, labels, plan):
             opt_state = opt.init(global_params)
@@ -288,10 +380,23 @@ class FederatedSimulation:
             (params, _), _ = jax.lax.scan(step, (global_params, opt_state), plan)
             return params
 
-        local_train = jax.vmap(one_client, in_axes=(None, 0, 0, 0))
+        if flat:
+            # ravel inside the vmapped client so the [S, N] matrix is
+            # local_train's direct output — the stacked pytree never
+            # materializes as a separate buffer (an extra S*N-sized copy
+            # per round otherwise)
+            def one_client_flat(global_params, images, labels, plan):
+                return fspec.ravel(one_client(global_params, images,
+                                              labels, plan))
+
+            local_train = jax.vmap(one_client_flat, in_axes=(None, 0, 0, 0))
+        else:
+            local_train = jax.vmap(one_client, in_axes=(None, 0, 0, 0))
 
         def round_step(state: ServerState, rnd):
             params = state.params
+            # the flat carry holds [N]; local SGD needs the model pytree
+            model_params = fspec.unravel(params) if flat else params
             key = jax.random.fold_in(self._base_key, rnd)
             k_sel, k_batch, k_scen = jax.random.split(key, 3)
             # derived, not split: keeps k_sel/k_batch/k_scen bit-identical
@@ -306,8 +411,11 @@ class FederatedSimulation:
             ))
             plans = device_batch_plans(k_batch, self.counts[sel],
                                        self._fixed_steps, cfg.batch_size)
-            stacked = local_train(params, self.images[sel], self.labels[sel],
-                                  plans)
+            # flat mode: local_train already emits the [S, N] matrix —
+            # everything downstream (criteria, weighting, aggregation,
+            # the candidate sweep) streams over it
+            stacked = local_train(model_params, self.images[sel],
+                                  self.labels[sel], plans)
 
             if fleet is not None:
                 mask, contrib = participation(fleet, sel, rnd, k_scen)
@@ -331,7 +439,7 @@ class FederatedSimulation:
                               mask=mask, contrib=contrib, dt=dt)
             state, ys = strategy.step(
                 state, inp, cfg.aggregation, cfg.online_adjust,
-                eval_fn=lambda cand: self._eval_global(cand)[1],
+                eval_fn=lambda cand: self._eval_params(cand)[1],
             )
             ys["participants"] = jnp.sum(mask)
             return state, ys
@@ -343,7 +451,7 @@ class FederatedSimulation:
 
         def run_block(state: ServerState, round_ids):
             state, ys = jax.lax.scan(self._round_step, state, round_ids)
-            accs, global_acc = self._eval_global(state.params)
+            accs, global_acc = self._eval_params(state.params)
             return state, ys, accs, global_acc
 
         return run_block
@@ -379,6 +487,11 @@ class FederatedSimulation:
         }
 
         state = self.init_state()
+        if self.cfg.donate:
+            # donated dispatches consume the carry's buffers in place —
+            # copy so arrays the caller still holds (self.params and, for
+            # resumed runs, a prior final_state) survive this run
+            state = jax.tree.map(lambda x: jnp.array(x, copy=True), state)
 
         rnd = 0
         while rnd < cfg.max_rounds:
@@ -421,6 +534,7 @@ class FederatedSimulation:
             if all(v is not None for v in rounds_to.values()):
                 break
 
-        self.params = state.params
-        return SimResult(metrics=metrics, final_params=state.params,
+        self.params = (self._fspec.unravel(state.params) if self._flat
+                       else state.params)
+        return SimResult(metrics=metrics, final_params=self.params,
                          rounds_to_target=rounds_to, final_state=state)

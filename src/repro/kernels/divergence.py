@@ -39,8 +39,12 @@ def divergence_sq(
     """Per-client squared L2 distance ``[K]`` (f32) to ``global_vec [N]``.
 
     Zero padding is harmless: padded columns contribute ``(0-0)^2``.
+    ``block_n`` is clamped to the lane-aligned width the input needs, so
+    small vectors are not padded to a full default tile; any ``K >= 1`` /
+    ``N >= 1`` works, with f32 accumulation for every storage dtype.
     """
     K, N = stacked.shape
+    block_n = min(block_n, ((N + 127) // 128) * 128)
     n_pad = (-N) % block_n
     if n_pad:
         stacked = jnp.pad(stacked, ((0, 0), (0, n_pad)))

@@ -1,11 +1,19 @@
-"""Jit'd public wrappers over the Pallas kernels (+ pytree adapters).
+"""Jit'd public wrappers over the Pallas kernels (+ pytree/flat adapters).
 
-``interpret=True`` everywhere in this container (CPU validation mode); on a
-real TPU the launch scripts pass ``interpret=False``.
+Two kinds of entry points:
+
+* ``tree_*`` — pytree adapters that view each stacked leaf as ``[K, N]``
+  and run the kernel per leaf (``interpret=True`` everywhere in this
+  container; on a real TPU the launch scripts pass ``interpret=False``).
+* ``flat_*`` — the flat-vector server hot path: one ``[S, N]`` matrix for
+  the whole model, dispatched through :func:`resolve_kernel_mode` — the
+  compiled Mosaic kernel on TPU, the fused jnp reference elsewhere
+  (interpret-mode Pallas emulation is orders of magnitude slower than an
+  XLA fusion on CPU, so it is never picked implicitly).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -15,6 +23,68 @@ from repro.kernels.divergence import divergence_sq
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.weighted_agg import weighted_agg
 from repro.utils.pytree import PyTree
+
+
+def resolve_kernel_mode(interpret: Optional[bool] = None) -> Tuple[bool, bool]:
+    """Shared backend-aware kernel dispatch: ``(use_pallas, interpret)``.
+
+    * ``interpret=None`` (auto, the hot-path default): on TPU run the
+      compiled Mosaic kernels (``(True, False)``); on every other backend
+      use the jnp reference path (``(False, True)``) — XLA fuses it into
+      one streaming pass, while interpret-mode Pallas would emulate the
+      grid in Python.
+    * an explicit bool *forces* the Pallas kernel with that interpret
+      setting — tests use ``interpret=True`` to validate kernel bodies on
+      CPU.
+    """
+    if interpret is not None:
+        return True, bool(interpret)
+    on_tpu = jax.default_backend() == "tpu"
+    return on_tpu, not on_tpu
+
+
+def flat_weighted_agg(
+    stacked: jax.Array,
+    weights: jax.Array,
+    interpret: Optional[bool] = None,
+    block_n: int = 2048,
+) -> jax.Array:
+    """``w_G[n] = Σ_k p_k · stacked[k, n]`` on the flat representation.
+
+    ``stacked`` is the round's ``[S, N]`` flat client matrix.  One fused
+    weighted reduction: the streaming Pallas kernel on TPU, a BLAS
+    ``weights @ stacked`` matvec elsewhere (f32 accumulation either way).
+    """
+    use_pallas, interp = resolve_kernel_mode(interpret)
+    if use_pallas:
+        return weighted_agg(stacked, weights, block_n=block_n,
+                            interpret=interp)
+    out = weights.astype(jnp.float32) @ stacked.astype(jnp.float32)
+    return out.astype(stacked.dtype)
+
+
+def flat_divergence_sq(
+    stacked: jax.Array,
+    global_vec: jax.Array,
+    interpret: Optional[bool] = None,
+    block_n: int = 2048,
+) -> jax.Array:
+    """Per-client squared L2 distance ``[S]`` on the flat representation.
+
+    One streaming subtract→square→reduce pass over ``[S, N]`` — the Md
+    criterion's input without ever materializing an ``[S, params]``
+    update pytree.  The jnp fallback is the broadcast reference form
+    (``sum(square(g - x), axis=1)``): a row-mapped BLAS ``dot(d, d)``
+    variant is ~3x faster on *standalone* arrays on XLA CPU, but inside
+    the fused round block the broadcast form wins because XLA folds it
+    into the surrounding passes while ``lax.map`` forces a while-loop
+    barrier — measured on the ``hotpath`` bench before settling here.
+    """
+    use_pallas, interp = resolve_kernel_mode(interpret)
+    if use_pallas:
+        return divergence_sq(stacked, global_vec, block_n=block_n,
+                             interpret=interp)
+    return ref.divergence_ref(stacked, global_vec)
 
 
 def tree_weighted_agg(stacked: PyTree, weights: jax.Array,

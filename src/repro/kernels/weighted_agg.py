@@ -41,8 +41,14 @@ def weighted_agg(
     ``stacked``: [K, N] any float dtype; ``weights``: [K].
     ``interpret=True`` runs the kernel body in Python on CPU (validation
     mode for this container); on TPU pass ``interpret=False``.
+
+    Any ``K >= 1`` / ``N >= 1`` works: ``block_n`` is clamped to the
+    lane-aligned width the input actually needs, so a 257-element vector
+    pads to 384 columns (one grid step), not 2048.  Accumulation is f32
+    regardless of the storage dtype (bf16 in, bf16 out, f32 math).
     """
     K, N = stacked.shape
+    block_n = min(block_n, ((N + 127) // 128) * 128)
     n_pad = (-N) % block_n
     if n_pad:
         stacked = jnp.pad(stacked, ((0, 0), (0, n_pad)))

@@ -95,6 +95,62 @@ def tree_unflatten_from_vector(vec: jax.Array, like: PyTree) -> PyTree:
     return jax.tree.unflatten(treedef, out)
 
 
+class FlatSpec:
+    """Cached ravel/unravel plan for one pytree structure.
+
+    The flat-vector server hot path keeps the global model as one ``[N]``
+    f32 vector and a round's locally-trained client models as one
+    ``[S, N]`` matrix, so criteria, aggregation and the Algorithm-1
+    candidate sweep become fused streaming passes (see
+    ``docs/ARCHITECTURE.md``).  This class precomputes everything the
+    conversions need — treedef, leaf shapes/dtypes and slice offsets —
+    once per model structure, so :meth:`ravel` / :meth:`stack_ravel` /
+    :meth:`unravel` trace with zero per-call structure work.
+
+    Leaf order is ``jax.tree.leaves`` order, matching
+    :func:`tree_flatten_to_vector` (round-trip tested).
+    """
+
+    def __init__(self, template: PyTree):
+        leaves, self.treedef = jax.tree.flatten(template)
+        if not leaves:
+            raise ValueError("FlatSpec needs a pytree with at least one leaf")
+        self.shapes = tuple(tuple(x.shape) for x in leaves)
+        self.dtypes = tuple(x.dtype for x in leaves)
+        self.sizes = tuple(int(x.size) for x in leaves)
+        self.num_params = sum(self.sizes)
+        offs = [0]
+        for n in self.sizes:
+            offs.append(offs[-1] + n)
+        self.offsets = tuple(offs)
+
+    def ravel(self, tree: PyTree) -> jax.Array:
+        """Pytree → one ``[N]`` f32 vector (leaf order of the template)."""
+        leaves = jax.tree.leaves(tree)
+        return jnp.concatenate([x.astype(jnp.float32).ravel() for x in leaves])
+
+    def stack_ravel(self, stacked: PyTree) -> jax.Array:
+        """Stacked pytree (leaves ``[S, ...]``) → one ``[S, N]`` f32 matrix.
+
+        Row ``k`` equals ``ravel(tree_index(stacked, k))`` — each client's
+        parameters occupy the same column slices as the global vector's.
+        """
+        leaves = jax.tree.leaves(stacked)
+        s = leaves[0].shape[0]
+        return jnp.concatenate(
+            [x.astype(jnp.float32).reshape(s, -1) for x in leaves], axis=1
+        )
+
+    def unravel(self, vec: jax.Array) -> PyTree:
+        """``[N]`` vector → pytree with the template's shapes and dtypes."""
+        out = [
+            jax.lax.slice(vec, (self.offsets[i],), (self.offsets[i + 1],))
+            .reshape(shape).astype(dtype)
+            for i, (shape, dtype) in enumerate(zip(self.shapes, self.dtypes))
+        ]
+        return jax.tree.unflatten(self.treedef, out)
+
+
 def tree_map_with_path_names(fn: Callable[[str, jax.Array], Any], tree: PyTree) -> PyTree:
     """tree.map where ``fn`` also receives a '/'-joined key-path string."""
     def _fmt(path) -> str:

@@ -1,0 +1,301 @@
+"""Flat-vector server hot path: numeric equivalence vs the pytree path.
+
+The flat path (``FedSimConfig(flat_params=True)``) reuses the exact same
+round body as the default pytree path — only the *representation* of the
+server-side math changes (one ``[S, N]`` matrix / ``[N]`` carry instead
+of per-leaf pytrees), so the two trajectories must agree to float
+tolerance everywhere:
+
+* unit level — ``FlatSpec`` ravel/unravel round-trips, the fused flat
+  aggregation / divergence ops against the pytree reference, the flat
+  Algorithm-1 candidate sweep against the pytree sweep,
+* end to end — flat vs pytree trajectories on the ``uniform`` and
+  ``tiered-fleet`` presets under sync, buffered-async and
+  ``online_adjust=True`` (the CI equivalence gate), plus the recorded
+  golden trajectory itself within ``rtol=1e-5``,
+* donation — a donated carry must not corrupt buffers the caller still
+  holds across repeated ``run()`` calls.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _helpers import init_mlp_params, mlp_accuracy, mlp_loss
+from repro.core import AggregationConfig, adjust_round_vectorized, criterion_needs
+from repro.core.aggregate import aggregate_models
+from repro.data.synthetic import make_synth_femnist
+from repro.federated import BufferedAsyncStrategy, ScenarioConfig
+from repro.federated.simulation import FederatedSimulation, FedSimConfig
+from repro.kernels import ops as kops
+from repro.utils.pytree import (
+    FlatSpec,
+    tree_flatten_to_vector,
+    tree_index,
+    tree_weighted_sum,
+)
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)), "golden",
+                      "engine_uniform.json")
+RNG = np.random.default_rng(7)
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    return make_synth_femnist(num_clients=16, mean_samples=20, seed=3)
+
+
+@pytest.fixture(scope="module")
+def mlp_params():
+    return init_mlp_params(jax.random.key(0), hidden=32)
+
+
+def _rand_stacked(params, S):
+    return jax.tree.map(
+        lambda p: p[None] + jnp.asarray(
+            RNG.normal(size=(S,) + p.shape, scale=0.05), p.dtype), params)
+
+
+# ---------------------------------------------------------------------------
+# FlatSpec + fused flat ops
+# ---------------------------------------------------------------------------
+
+class TestFlatSpec:
+    def test_ravel_unravel_roundtrip(self, mlp_params):
+        spec = FlatSpec(mlp_params)
+        vec = spec.ravel(mlp_params)
+        assert vec.shape == (spec.num_params,)
+        back = spec.unravel(vec)
+        assert jax.tree.structure(back) == jax.tree.structure(mlp_params)
+        for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(mlp_params)):
+            assert a.dtype == b.dtype and a.shape == b.shape
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_ravel_matches_tree_flatten_to_vector(self, mlp_params):
+        spec = FlatSpec(mlp_params)
+        np.testing.assert_array_equal(
+            np.asarray(spec.ravel(mlp_params)),
+            np.asarray(tree_flatten_to_vector(mlp_params)))
+
+    def test_stack_ravel_rows_are_per_client_ravels(self, mlp_params):
+        spec = FlatSpec(mlp_params)
+        stacked = _rand_stacked(mlp_params, 3)
+        mat = spec.stack_ravel(stacked)
+        assert mat.shape == (3, spec.num_params)
+        for k in range(3):
+            np.testing.assert_array_equal(
+                np.asarray(mat[k]),
+                np.asarray(spec.ravel(tree_index(stacked, k))))
+
+
+class TestFlatOps:
+    def test_resolve_kernel_mode(self):
+        # auto never picks interpret-mode pallas off-TPU
+        on_tpu = jax.default_backend() == "tpu"
+        assert kops.resolve_kernel_mode(None) == (on_tpu, not on_tpu)
+        # explicit bool forces the pallas kernel in that mode
+        assert kops.resolve_kernel_mode(True) == (True, True)
+        assert kops.resolve_kernel_mode(False) == (True, False)
+
+    def test_flat_weighted_agg_matches_pytree(self, mlp_params):
+        spec = FlatSpec(mlp_params)
+        stacked = _rand_stacked(mlp_params, 5)
+        w = jnp.asarray(RNG.uniform(size=5), jnp.float32)
+        w = w / w.sum()
+        flat_out = kops.flat_weighted_agg(spec.stack_ravel(stacked), w)
+        ref = spec.ravel(tree_weighted_sum(stacked, w))
+        np.testing.assert_allclose(np.asarray(flat_out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-6)
+
+    def test_flat_divergence_matches_pytree_norms(self, mlp_params):
+        from repro.utils.pytree import tree_sq_norm
+
+        spec = FlatSpec(mlp_params)
+        stacked = _rand_stacked(mlp_params, 4)
+        g = spec.ravel(mlp_params)
+        out = kops.flat_divergence_sq(spec.stack_ravel(stacked), g)
+        expect = [
+            float(tree_sq_norm(jax.tree.map(
+                lambda s, p: s[k] - p, stacked, mlp_params)))
+            for k in range(4)
+        ]
+        np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-4)
+
+    def test_aggregate_models_dispatches_flat_matrix(self):
+        x = jnp.asarray(RNG.normal(size=(6, 500)), jnp.float32)
+        w = jnp.asarray(RNG.uniform(size=6), jnp.float32)
+        w = w / w.sum()
+        out = aggregate_models(x, w)            # bare [K, N]: flat hot path
+        ref = tree_weighted_sum(x, w)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-6)
+
+    def test_model_divergence_declares_update_need(self):
+        assert "update" in criterion_needs("Md")
+        assert criterion_needs("dataset_size") == ()
+
+    def test_undeclared_criterion_still_gets_updates_on_pytree_path(
+            self, small_data, mlp_params):
+        """A criterion registered WITHOUT a needs declaration (the
+        pre-laziness extension recipe) must keep receiving ctx.update on
+        the pytree path — and be refused, loudly, by the flat path
+        (which only carries the streamed squared norm)."""
+        from repro.core import register_criterion
+        from repro.utils.pytree import tree_sq_norm
+
+        seen = []
+
+        def custom_div(ctx):
+            seen.append(ctx.update is not None)
+            assert ctx.update is not None, \
+                "undeclared criterion lost its update context"
+            return 1.0 / (1.0 + tree_sq_norm(ctx.update))
+
+        register_criterion("test_undeclared_div", custom_div)
+        assert criterion_needs("test_undeclared_div") is None
+
+        def cfg(flat):
+            return FedSimConfig(
+                fraction=0.25, batch_size=8, local_epochs=1, lr=0.1,
+                max_rounds=1, flat_params=flat,
+                aggregation=AggregationConfig(
+                    criteria=("Ds", "Ld", "test_undeclared_div"),
+                    priority=(0, 1, 2)))
+
+        sim = FederatedSimulation(small_data, mlp_params, mlp_loss,
+                                  mlp_accuracy, cfg(False))
+        res = sim.run(targets=(0.99,), device_fracs=(0.99,), verbose=False)
+        assert seen and all(seen)      # traced with a real update pytree
+        assert np.isfinite(res.metrics[-1].global_acc)
+
+        with pytest.raises(ValueError, match="needs declaration"):
+            FederatedSimulation(small_data, mlp_params, mlp_loss,
+                                mlp_accuracy, cfg(True))
+
+
+class TestFlatAdjust:
+    def test_flat_sweep_matches_pytree_sweep(self, mlp_params):
+        spec = FlatSpec(mlp_params)
+        S = 5
+        stacked = _rand_stacked(mlp_params, S)
+        flat_stacked = spec.stack_ravel(stacked)
+        c = jnp.asarray(RNG.uniform(0.1, 1.0, (S, 3)), jnp.float32)
+        c = c / c.sum(0, keepdims=True)
+        cfg = AggregationConfig(priority=(2, 0, 1))
+        probe = jnp.asarray(RNG.normal(size=(spec.num_params,)), jnp.float32)
+
+        def eval_tree(p):
+            return jnp.vdot(probe, spec.ravel(p))
+
+        def eval_flat(v):
+            return jnp.vdot(probe, v)
+
+        for prev_q in (-1e9, 1e9):   # no-backtrack and full-backtrack
+            a = adjust_round_vectorized(
+                c, stacked, cfg, jnp.asarray(0), jnp.asarray(prev_q),
+                eval_fn=eval_tree)
+            b = adjust_round_vectorized(
+                c, flat_stacked, cfg, jnp.asarray(0), jnp.asarray(prev_q),
+                eval_fn=eval_flat)
+            assert int(a.priority) == int(b.priority)
+            assert bool(a.backtracked) == bool(b.backtracked)
+            np.testing.assert_allclose(float(a.quality), float(b.quality),
+                                       rtol=1e-4)
+            np.testing.assert_allclose(
+                np.asarray(spec.ravel(a.global_params)),
+                np.asarray(b.global_params), rtol=2e-5, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end equivalence: the CI gate for the flat path
+# ---------------------------------------------------------------------------
+
+def _traj(data, params, flat, preset, mode, rounds=4, block=2):
+    kw = {}
+    if mode == "async":
+        kw = dict(
+            aggregation=AggregationConfig(
+                criteria=("staleness", "Ds", "Ld", "Md"),
+                priority=(0, 1, 2, 3)),
+            strategy=BufferedAsyncStrategy(buffer_size=6),
+        )
+    else:
+        kw = dict(aggregation=AggregationConfig(priority=(2, 0, 1)),
+                  online_adjust=(mode == "adjust"))
+    cfg = FedSimConfig(
+        fraction=0.25, batch_size=8, local_epochs=1, lr=0.1,
+        max_rounds=rounds, eval_every=block, flat_params=flat,
+        scenario=ScenarioConfig(preset=preset, seed=1), **kw)
+    sim = FederatedSimulation(data, params, mlp_loss, mlp_accuracy, cfg)
+    res = sim.run(targets=(0.99,), device_fracs=(0.99,), verbose=False)
+    return res
+
+
+@pytest.mark.parametrize("preset", ["uniform", "tiered-fleet"])
+@pytest.mark.parametrize("mode", ["sync", "async", "adjust"])
+def test_flat_matches_pytree_trajectory(small_data, mlp_params, preset, mode):
+    ref = _traj(small_data, mlp_params, False, preset, mode)
+    flat = _traj(small_data, mlp_params, True, preset, mode)
+    for field in ("global_acc", "weights_entropy", "sim_time"):
+        np.testing.assert_allclose(
+            [getattr(m, field) for m in ref.metrics],
+            [getattr(m, field) for m in flat.metrics],
+            rtol=1e-5, atol=1e-6, err_msg=f"{preset}/{mode}/{field}")
+    # the flat carry unravels back to the reference final model
+    for a, b in zip(jax.tree.leaves(ref.final_params),
+                    jax.tree.leaves(flat.final_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_flat_reproduces_recorded_golden_within_tolerance():
+    """The flat path replays the pre-refactor golden trajectory within
+    ``rtol=1e-5`` (the bit-for-bit golden check for the default path
+    lives in ``test_engine.py`` and is untouched)."""
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    g = golden["config"]
+    data = make_synth_femnist(num_clients=g["num_clients"],
+                              mean_samples=g["mean_samples"],
+                              seed=g["data_seed"])
+    params = init_mlp_params(jax.random.key(g["param_seed"]),
+                             hidden=g["hidden"])
+    cfg = FedSimConfig(
+        fraction=g["fraction"], batch_size=g["batch_size"],
+        local_epochs=g["local_epochs"], lr=g["lr"],
+        max_rounds=g["max_rounds"], eval_every=g["eval_every"],
+        aggregation=AggregationConfig(priority=tuple(g["priority"])),
+        scenario=ScenarioConfig(preset=g["preset"]),
+        flat_params=True,
+    )
+    sim = FederatedSimulation(data, params, mlp_loss, mlp_accuracy, cfg)
+    res = sim.run(targets=(0.99,), device_fracs=(0.99,), verbose=False)
+    assert [m.round for m in res.metrics] == golden["rounds"]
+    np.testing.assert_allclose([m.global_acc for m in res.metrics],
+                               golden["global_acc"], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose([m.weights_entropy for m in res.metrics],
+                               golden["weights_entropy"], rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_donated_carry_survives_repeated_runs(small_data, mlp_params):
+    """run() copies externally-held buffers before donating, so the same
+    simulation can be re-run and self.params stays alive."""
+    cfg = FedSimConfig(fraction=0.25, batch_size=8, local_epochs=1, lr=0.1,
+                       max_rounds=2, eval_every=2, flat_params=True,
+                       donate=True,
+                       aggregation=AggregationConfig(priority=(2, 0, 1)))
+    sim = FederatedSimulation(small_data, mlp_params, mlp_loss,
+                              mlp_accuracy, cfg)
+    first = sim.run(targets=(0.99,), device_fracs=(0.99,), verbose=False)
+    sim.params = mlp_params          # rewind and replay
+    second = sim.run(targets=(0.99,), device_fracs=(0.99,), verbose=False)
+    assert [m.global_acc for m in first.metrics] == \
+        [m.global_acc for m in second.metrics]
+    # the original init params were never consumed by donation — reading
+    # a donated-away buffer would raise RuntimeError
+    for leaf in jax.tree.leaves(mlp_params):
+        assert np.isfinite(np.asarray(leaf)).all()

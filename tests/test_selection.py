@@ -315,6 +315,10 @@ class TestEngineThreading:
                 priority=(0, 1, 2, 3)),
             scenario=ScenarioConfig(preset="uniform"),
             strategy=BufferedAsyncStrategy(buffer_size=64),
+            # this test drives _run_one directly and re-reads the input
+            # carry afterwards — opt out of carry donation (run() callers
+            # get a protective copy instead)
+            donate=False,
         )
         sim = FederatedSimulation(small_data, mlp_params, mlp_loss,
                                   mlp_accuracy, cfg)
