@@ -1,6 +1,6 @@
 """Round-loop benchmark: dispatch/hotpath x strategies x selection policies.
 
-Four sections, all on synthetic workloads (see ``benchmarks/README.md``
+Five sections, all on synthetic workloads (see ``benchmarks/README.md``
 for the metric schema and sim-time units):
 
 * **Dispatch** — steady-state rounds/sec of the engine's two execution
@@ -24,6 +24,13 @@ for the metric schema and sim-time units):
   bounds the coverage loss) and cuts virtual time-to-target vs the
   uniform draw; the oracle shows the barrier floor of selecting on true
   completion times — and the accuracy collapse of pure fastest-first.
+* **Robust** — accuracy under attack: the hostile presets (``churn``
+  arrivals/departures, ``diurnal`` availability waves, ``byzantine``
+  25% sign-flip cohort) against plain sync vs the two robust strategies
+  (coordinate-wise trimmed mean, L2 clip + Gaussian noise).  Headline:
+  trimmed mean holds its accuracy under the byzantine preset while
+  plain sync tracks the poisoned mean; churn/diurnal rows price the
+  robustness tax when the fleet is unstable but honest.
 * **Hotpath** — the flat-vector server path vs the default pytree path
   at the paper CNN's parameter scale (6.6M params, S=32): end-to-end
   round-block throughput, the carry-donation dispatch delta, and
@@ -62,7 +69,12 @@ from repro.core.criteria import (
 )
 from repro.data.pipeline import device_batch_plans
 from repro.data.synthetic import make_synth_femnist
-from repro.federated import BufferedAsyncStrategy, ScenarioConfig, make_policy
+from repro.federated import (
+    BufferedAsyncStrategy,
+    ScenarioConfig,
+    make_policy,
+    make_strategy,
+)
 from repro.federated.simulation import FederatedSimulation, FedSimConfig
 from repro.kernels import ops as kops
 from repro.models.mlp import init_mlp_params, mlp_accuracy, mlp_loss
@@ -175,6 +187,67 @@ def bench_selection(data, params, rounds: int, block: int,
                                 selection=make_policy(pname))
             out[f"{pname}/{sname}"] = _run_to_target(data, params, cfg,
                                                      target_acc)
+    return out
+
+
+#: the hostile-preset sweep grid — every adversarial preset under the
+#: plain sync barrier and both robust aggregation strategies
+ROBUST_PRESETS = ("churn", "diurnal", "byzantine")
+ROBUST_STRATEGIES = ("sync", "trimmed-mean", "clipped-dp")
+
+
+def _robust_cfg(sname: str, preset: str, rounds: int, block: int,
+                cohort: int) -> FedSimConfig:
+    common = dict(
+        fraction=0.25, batch_size=10, local_epochs=1, lr=0.1,
+        max_rounds=rounds, eval_every=block,
+        scenario=ScenarioConfig(preset=preset, seed=0),
+    )
+    if sname == "sync":
+        return FedSimConfig(
+            aggregation=AggregationConfig(priority=(2, 0, 1)), **common)
+    if sname == "trimmed-mean":
+        # trim one quarter of the cohort per side — matched to the
+        # byzantine preset's 25% corrupt fraction, clamped so
+        # 2*trim < S holds even for tiny smoke cohorts
+        return FedSimConfig(
+            aggregation=AggregationConfig(priority=(2, 0, 1)),
+            strategy=make_strategy(
+                "trimmed-mean",
+                trim=min(max(1, cohort // 4), (cohort - 1) // 2)),
+            **common)
+    if sname == "clipped-dp":
+        # update_norm leads the priority order: oversized payloads are
+        # down-weighted before the clip even triggers
+        return FedSimConfig(
+            aggregation=AggregationConfig(
+                criteria=("Ds", "Ld", "Md", "update_norm"),
+                priority=(3, 2, 0, 1)),
+            strategy=make_strategy("clipped-dp", clip_norm=1.0,
+                                   noise_multiplier=0.05),
+            **common)
+    raise KeyError(sname)
+
+
+def bench_robust(data, params, rounds: int, block: int,
+                 target_acc: float = 0.75) -> dict:
+    """Hostile-preset x strategy sweep: accuracy under attack.
+
+    Every adversarial preset (``churn`` arrivals/departures, ``diurnal``
+    availability waves, ``byzantine`` 25% sign-flip cohort) against the
+    plain sync barrier and the two robust strategies (coordinate-wise
+    trimmed mean, L2 clip + Gaussian noise).  The headline is the
+    byzantine row: plain sync tracks the poisoned mean while trimmed
+    mean holds its accuracy; the churn/diurnal rows show the robustness
+    tax the defenses pay when the fleet is merely unstable, not hostile.
+    """
+    cohort = max(1, round(0.25 * data.images.shape[0]))
+    out = {}
+    for preset in ROBUST_PRESETS:
+        for sname in ROBUST_STRATEGIES:
+            cfg = _robust_cfg(sname, preset, rounds, block, cohort)
+            out[f"{preset}/{sname}"] = _run_to_target(data, params, cfg,
+                                                      target_acc)
     return out
 
 
@@ -446,6 +519,7 @@ def main(clients: int = 64, rounds: int = 64, block: int = 16,
     strat = bench_strategies(sdata, sparams, strat_rounds, 10, target_acc)
     selection = bench_selection(sdata, sparams, strat_rounds, 10,
                                 target_acc, reuse=strat)
+    robust = bench_robust(sdata, sparams, strat_rounds, 10, target_acc)
     hotpath = bench_hotpath(smoke=smoke)
 
     rows = [
@@ -475,6 +549,12 @@ def main(clients: int = 64, rounds: int = 64, block: int = 16,
             s["sim_time_to_target"] if s["sim_time_to_target"] is not None
             else -1.0,
             f"round {s['rounds_to_target']}, best_acc={s['best_acc']:.3f}",
+        ))
+    for key, s in robust.items():
+        preset, sname = key.split("/")
+        rows.append((
+            f"roundloop_robust_{preset}_{sname}_best_acc", s["best_acc"],
+            f"final={s['final_acc']:.3f} after {s['rounds_run']} rounds",
         ))
     hb, hw = hotpath["block"], hotpath["workload"]
     rows.append((
@@ -523,6 +603,14 @@ def main(clients: int = 64, rounds: int = 64, block: int = 16,
             "clients": strat_clients, "max_rounds": strat_rounds,
             "policies": list(POLICY_SWEEP),
             **selection,
+        },
+        "robust": {
+            "presets": list(ROBUST_PRESETS),
+            "strategies": list(ROBUST_STRATEGIES),
+            "attack": {"name": "sign-flip", "frac": 0.25, "scale": 1.0},
+            "target_acc": target_acc,
+            "clients": strat_clients, "max_rounds": strat_rounds,
+            **robust,
         },
         "hotpath": hotpath,
     }

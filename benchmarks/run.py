@@ -15,6 +15,7 @@ here); see EXPERIMENTS.md §Dry-run / §Roofline.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import subprocess
 import sys
@@ -24,20 +25,34 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 
 
-def main() -> None:
-    print("# === microbenches (name,us_per_call,derived) ===", flush=True)
-    from benchmarks import microbench
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI slice: every section still runs "
+                         "and every BENCH_roundloop.json key is emitted, "
+                         "but at toy sizes (and table1 is skipped)")
+    ap.add_argument("--out", default=str(ROOT / "BENCH_roundloop.json"),
+                    help="where to write the roundloop results JSON")
+    args = ap.parse_args(argv)
 
-    microbench.main()
+    if not args.smoke:
+        print("# === microbenches (name,us_per_call,derived) ===",
+              flush=True)
+        from benchmarks import microbench
+
+        microbench.main()
 
     print("# === round loop: dispatch modes x aggregation strategies ===",
           flush=True)
     from benchmarks import roundloop
 
-    roundloop_results = roundloop.main()
-    bench_out = ROOT / "BENCH_roundloop.json"
-    bench_out.write_text(json.dumps(roundloop_results, indent=2))
+    roundloop_results = roundloop.main(smoke=args.smoke)
+    bench_out = Path(args.out)
+    bench_out.write_text(json.dumps(roundloop_results, indent=2) + "\n")
     print(f"# roundloop results -> {bench_out}", flush=True)
+
+    if args.smoke:
+        return
 
     print("# === paper Table 1 (reduced scale; see benchmarks/table1.py "
           "--full for the complete sweep) ===", flush=True)

@@ -1,10 +1,16 @@
 """Device-heterogeneity scenarios: the same federated workload across
-device fleets ("uniform", "mobile-heavy", "flaky-network", "tiered-fleet").
+every fleet preset registered in ``repro.federated.scenarios.PRESETS``
+(benign: uniform / mobile-heavy / flaky-network / tiered-fleet; hostile:
+churn / diurnal / byzantine) — a preset added to the registry is swept
+here automatically.
 
 Runs the on-device round loop once per preset at a fixed seed — identical
 sampling/batching streams, only the fleet differs — and reports final
 accuracy, mean participants per round, and rounds/sec, showing how
-dropouts, duty cycles, and stragglers reshape device-aware aggregation.
+dropouts, duty cycles, stragglers, and adversaries reshape device-aware
+aggregation.  The ``byzantine`` preset is run twice: once under plain
+sync (watch the sign-flip cohort poison the mean) and once under the
+coordinate-wise trimmed mean (``byzantine+trimmed-mean`` row).
 
     PYTHONPATH=src python examples/scenario_fleet.py --rounds 60
 """
@@ -20,6 +26,7 @@ import numpy as np
 
 from repro.core import AggregationConfig
 from repro.data.synthetic import make_synth_femnist
+from repro.federated import make_strategy
 from repro.federated.scenarios import PRESETS, ScenarioConfig
 from repro.federated.simulation import FederatedSimulation, FedSimConfig
 from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn_params
@@ -53,13 +60,25 @@ def main() -> None:
         params = init_mlp_params(jax.random.key(0), hidden=args.hidden)
         loss_fn, acc_fn = mlp_loss, mlp_accuracy
 
+    # the registry sweep, plus the robust-aggregation counterpoint for
+    # the byzantine preset (same fleet, trimmed-mean server)
+    runs = [(preset, None) for preset in sorted(PRESETS)]
+    if "byzantine" in PRESETS:
+        # quarter-cohort trim, clamped so 2*trim < cohort always holds
+        # (tiny --clients smoke runs degrade to a plain weighted mean)
+        cohort = max(1, round(0.2 * args.clients))
+        trim = min(cohort // 4, (cohort - 1) // 2)
+        runs.append(("byzantine", make_strategy("trimmed-mean", trim=trim)))
+
     report = {}
-    for preset in sorted(PRESETS):
+    for preset, strategy in runs:
+        label = preset if strategy is None else f"{preset}+trimmed-mean"
         cfg = FedSimConfig(
             fraction=0.2, batch_size=10, local_epochs=1, lr=0.05,
             max_rounds=args.rounds, eval_every=args.block,
             online_adjust=args.adjust,
             aggregation=AggregationConfig(priority=(2, 0, 1)),
+            strategy=strategy,
             scenario=ScenarioConfig(preset=preset,
                                     bias_sampling=args.bias_sampling),
         )
@@ -69,13 +88,13 @@ def main() -> None:
         dt = time.time() - t0
         accs = [m.global_acc for m in res.metrics] or [float("nan")]
         parts = [m.participants for m in res.metrics] or [0]
-        report[preset] = {
+        report[label] = {
             "final_acc": accs[-1],
             "best_acc": max(accs),
             "mean_participants": float(np.mean(parts)),
             "rounds_per_sec": args.rounds / dt,
         }
-        print(f"[{preset:14s}] final={accs[-1]:.3f} best={max(accs):.3f} "
+        print(f"[{label:22s}] final={accs[-1]:.3f} best={max(accs):.3f} "
               f"mean_participants={np.mean(parts):.1f} "
               f"({args.rounds / dt:.1f} rounds/s)")
 

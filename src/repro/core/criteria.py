@@ -99,6 +99,28 @@ def model_divergence(ctx: ClientContext) -> jax.Array:
     return 1.0 / jnp.sqrt(nrm + 1.0)
 
 
+def update_norm(ctx: ClientContext) -> jax.Array:
+    """1 / (1 + ||w_k - w_G||_2) — down-weights outlier-sized updates.
+
+    The robust-aggregation feedback channel: ``ClippedDPStrategy`` clips
+    every client delta at ``clip_norm``; the same per-client norms,
+    surfaced here as a criterion, let the prioritized operator down-weight
+    clients pushing abnormally large updates (scaled/sign-flipped
+    Byzantine payloads) *before* the clip even engages.  Unlike Md's
+    soft ``1/sqrt(nrm + 1)`` this decays linearly in the norm, so a
+    10x-scaled attacker loses ~10x weight, not ~3x.
+
+    Same laziness contract as :func:`model_divergence`: prefers the
+    streamed ``update_sq_norm`` on the flat path, falls back to reducing
+    ``ctx.update`` leaf by leaf.
+    """
+    if ctx.update_sq_norm is not None:
+        nrm = jnp.sqrt(jnp.asarray(ctx.update_sq_norm, jnp.float32))
+    else:
+        nrm = jnp.sqrt(tree_sq_norm(ctx.update))
+    return 1.0 / (1.0 + nrm)
+
+
 def load_balance(ctx: ClientContext) -> jax.Array:
     """Lb — entropy of the client's expert-utilization histogram (MoE).
 
@@ -191,6 +213,7 @@ for _name, _fn, _needs in [
     ("dataset_size", dataset_size, ()),
     ("label_diversity", label_diversity, ()),
     ("model_divergence", model_divergence, ("update",)),
+    ("update_norm", update_norm, ("update",)),
     ("load_balance", load_balance, ()),
     ("compute_capability", compute_capability, ()),
     ("staleness", staleness, ()),

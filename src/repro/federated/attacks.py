@@ -1,0 +1,130 @@
+"""Byzantine fault injection: attack transforms + fleet corruptors.
+
+The hostile-world layer's offensive half.  Three model-poisoning attacks
+on the client *update* (``delta = w_k - w_G``), applied inside the
+vmapped ``local_train`` — after the honest local SGD finishes, before the
+flat path ravels — so one injection point covers both the pytree and the
+flat ``[S, N]`` representations bit-identically:
+
+* ``sign-flip`` — ``delta' = -scale * delta``: the classic model-
+  poisoning attack; at ``scale > (1 - f) / f`` (f = corrupt fraction of
+  the round's weight) the weighted-mean commit moves *against* the
+  honest direction and plain ``SyncStrategy`` diverges,
+* ``scale``     — ``delta' = scale * delta``: a magnitude attack that
+  honest-looking criteria (Ds/Ld) cannot see but ``update_norm``
+  and per-client clipping neutralize,
+* ``random``    — ``delta' = scale * N(0, I)``: an uncoordinated noise
+  attacker (also models a faulty device, not just a malicious one).
+
+Defenses live in ``federated.engine`` (``TrimmedMeanStrategy``,
+``ClippedDPStrategy``) and ``core.criteria`` (``update_norm``).  The
+module is imported by the ``byzantine`` scenario preset, by
+``benchmarks/roundloop.py``'s robust section, and re-exported to the test
+suite through ``tests/_attacks.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import PyTree
+
+AttackFn = Callable[[PyTree, float, jax.Array], PyTree]
+
+
+def sign_flip(delta: PyTree, scale: float, key: jax.Array) -> PyTree:
+    """``delta' = -scale * delta`` — push the commit against the cohort."""
+    del key
+    return jax.tree.map(lambda d: -scale * d, delta)
+
+
+def scale_attack(delta: PyTree, scale: float, key: jax.Array) -> PyTree:
+    """``delta' = scale * delta`` — oversized but correctly-aimed update."""
+    del key
+    return jax.tree.map(lambda d: scale * d, delta)
+
+
+def random_noise(delta: PyTree, scale: float, key: jax.Array) -> PyTree:
+    """``delta' = scale * N(0, I)`` — garbage update, per-leaf key stream."""
+    leaves, treedef = jax.tree.flatten(delta)
+    keys = jax.random.split(key, len(leaves))
+    noise = [
+        (scale * jax.random.normal(k, x.shape, jnp.float32)).astype(x.dtype)
+        for k, x in zip(keys, leaves)
+    ]
+    return jax.tree.unflatten(treedef, noise)
+
+
+#: attack name -> ``fn(delta, scale, key) -> corrupted delta``.
+ATTACKS: Dict[str, AttackFn] = {
+    "sign-flip": sign_flip,
+    "scale": scale_attack,
+    "random": random_noise,
+}
+
+
+def get_attack(name: str) -> AttackFn:
+    if name not in ATTACKS:
+        raise KeyError(f"unknown attack {name!r}; available: {sorted(ATTACKS)}")
+    return ATTACKS[name]
+
+
+def apply_attack(
+    name: str,
+    trained: PyTree,
+    global_params: PyTree,
+    corrupt: jax.Array,
+    scale: float,
+    key: jax.Array,
+) -> PyTree:
+    """One client's post-training params, attacked iff ``corrupt > 0``.
+
+    Runs per client inside the vmapped ``local_train``: ``corrupt`` is
+    this client's 0/1 flag and ``key`` its per-(round, client) attack
+    stream.  Honest clients (``corrupt == 0``) are returned bit-for-bit —
+    the select is on the untouched ``trained`` pytree, not a recomposed
+    ``g + delta`` — so an all-honest corrupt mask reproduces the clean
+    trajectory exactly.
+    """
+    fn = get_attack(name)
+    delta = jax.tree.map(lambda p, g: p - g, trained, global_params)
+    bad_delta = fn(delta, scale, key)
+    is_bad = corrupt > 0
+    return jax.tree.map(
+        lambda p, g, b: jnp.where(is_bad, g + b, p),
+        trained, global_params, bad_delta,
+    )
+
+
+def corrupt_fleet(
+    fleet,
+    frac: float,
+    attack: str = "sign-flip",
+    scale: float = 1.0,
+    seed: int = 0,
+):
+    """Flag ``ceil(frac * K)`` uniformly-drawn clients of a fleet corrupt.
+
+    Returns a copy of ``fleet`` (any :class:`~.scenarios.DeviceFleet`)
+    with the ``corrupt`` mask set and the attack name/scale recorded as
+    static metadata; the simulation layer reads those to build the
+    injection into its jitted round step.  ``frac=0`` clears the mask
+    back to an honest fleet.
+    """
+    get_attack(attack)                       # fail fast on bad names
+    k = fleet.num_clients
+    m = int(math.ceil(frac * k))
+    if not 0 <= m <= k:
+        raise ValueError(f"corrupt fraction {frac} out of range for K={k}")
+    if m == 0:
+        return dataclasses.replace(fleet, corrupt=None)
+    key = jax.random.fold_in(jax.random.key(seed), 0xC0)
+    perm = jax.random.permutation(key, k)
+    mask = jnp.zeros((k,), jnp.float32).at[perm[:m]].set(1.0)
+    return dataclasses.replace(
+        fleet, corrupt=mask, attack=attack, attack_scale=float(scale)
+    )

@@ -29,6 +29,14 @@ execution are *policies* over one engine rather than three copies of it:
   - :class:`FedAvgStrategy` — dataset-size-only weighting (McMahan et
     al., 2017), the paper's baseline, for A/B against either of the
     above.
+  - :class:`TrimmedMeanStrategy` — Byzantine-robust sync: coordinate-wise
+    weighted trimmed mean over the round's client matrix (one fused
+    peel-reduce on the flat path — ``kernels/trimmed.py``), composing
+    with the prioritized criteria weights.
+  - :class:`ClippedDPStrategy` — DP-FedAvg-style hardening: per-client
+    L2 clipping plus calibrated Gaussian noise on the committed mean;
+    pairs with the registered ``update_norm`` criterion so oversized
+    updates lose weight *before* the clip engages.
 
 Virtual time: scenario fleets assign each selected client a completion
 time ``dt_k`` (``scenarios.completion_time``).  A sync round lasts
@@ -65,6 +73,7 @@ from repro.core import (
     compute_weights,
 )
 from repro.core.criteria import resolve
+from repro.kernels import ops as kops
 from repro.utils.pytree import PyTree
 
 # Candidate evaluation (Algorithm-1 lines 13-16): params -> scalar quality.
@@ -411,10 +420,196 @@ class BufferedAsyncStrategy(AggregationStrategy):
         return new_state, ys
 
 
+def _is_flat(stacked: PyTree) -> bool:
+    """Flat-path detection, mirroring ``aggregate_models``'s contract:
+    a bare 2-D array is the ``[S, N]`` client matrix, anything else a
+    stacked pytree."""
+    return isinstance(stacked, jax.Array) and stacked.ndim == 2
+
+
+@dataclass(frozen=True)
+class TrimmedMeanStrategy(AggregationStrategy):
+    """Byzantine-robust sync: coordinate-wise weighted trimmed mean.
+
+    Per coordinate of the round's ``[S, N]`` client matrix, the ``trim``
+    largest and ``trim`` smallest values are discarded and the survivors
+    combined by their (renormalized) prioritized multi-criteria weights —
+    so the defense composes with Ds/Ld/Md weighting instead of replacing
+    it.  Classical breakdown property: up to ``trim`` arbitrarily-corrupt
+    clients per coordinate cannot move the commit outside the honest
+    value range (property-tested in ``tests/test_robust.py``).
+
+    Notes on masks: a dropped client keeps weight 0 (it cannot pull the
+    mean) but its honest-looking local model still occupies a value slot
+    and may absorb part of the trim budget; size ``trim`` for the
+    round cohort ``S``, not the fleet.  Needs ``2 * trim < S``.
+
+    The reduction runs as one fused peel-reduce Pallas kernel on the flat
+    path (``kernels.ops.flat_trimmed_agg``) and per-leaf on the pytree
+    path — both share exact tie rules, and the two representations match
+    to the flat-vs-pytree gate's tolerance.
+
+    Algorithm-1 online adjustment is a sync-quality feedback loop over
+    *linear* candidate sweeps and does not compose with a non-linear
+    robust reduction; not supported.
+    """
+
+    trim: int = 1
+
+    supports_online_adjust = False
+
+    def step(self, state, inp, cfg, online_adjust, eval_fn):
+        S = int(inp.mask.shape[0])
+        if not 0 <= 2 * self.trim < S:
+            raise ValueError(
+                f"TrimmedMeanStrategy needs 0 <= 2*trim < round size; "
+                f"got trim={self.trim} for S={S}"
+            )
+        p = compute_weights(inp.criteria, cfg, tuple(cfg.priority),
+                            mask=inp.contrib)
+        if _is_flat(inp.stacked):
+            new_params = kops.flat_trimmed_agg(inp.stacked, p, self.trim)
+        else:
+            new_params = kops.tree_trimmed_agg(inp.stacked, p, self.trim)
+
+        alive = jnp.sum(inp.contrib) > 0
+        new_params = jax.tree.map(
+            lambda a, b: jnp.where(alive, a, b), new_params, state.params
+        )
+        barrier = jnp.max(inp.dt * inp.mask)
+        new_state = replace(
+            state,
+            params=new_params,
+            last_sync=_scatter_round(state.last_sync, inp.sel, inp.mask,
+                                     inp.rnd, alive.astype(jnp.float32)),
+            sim_time=state.sim_time + jnp.where(alive, barrier, 1.0),
+            commits=state.commits + alive.astype(jnp.int32),
+        )
+        ys = {
+            "entropy": _entropy(p),
+            "priority_idx": state.priority_idx,
+            "backtracked": jnp.asarray(False),
+            "num_evaluated": jnp.asarray(1, jnp.int32),
+        }
+        return new_state, ys
+
+
+@dataclass(frozen=True)
+class ClippedDPStrategy(AggregationStrategy):
+    """Per-client L2 clip + calibrated Gaussian noise (DP-FedAvg style).
+
+    Each participant's update ``delta_k = w_k - w_G`` is clipped to at
+    most ``clip_norm`` in L2, the clipped updates are averaged with the
+    prioritized multi-criteria weights, and (for ``noise_multiplier > 0``)
+    isotropic Gaussian noise is added to the committed mean:
+
+        w_G <- w_G + sum_k p_k c_k delta_k + sigma * N(0, I),
+        c_k = min(1, clip_norm / ||delta_k||),
+        sigma = noise_multiplier * clip_norm / max(n_participants, 1)
+
+    — the standard calibration for a mean of ``n`` contributions each of
+    sensitivity ``clip_norm / n`` (McMahan et al., 2018).  With
+    ``noise_multiplier = 0`` this is pure robust clipping: the commit's
+    step is norm-bounded by ``clip_norm`` regardless of what any client
+    sends, which already defuses magnitude attacks (scaled/sign-flip
+    payloads get truncated to the same length as honest updates).
+
+    Noise is deterministic per ``(noise_seed, round)`` — drawn from
+    ``fold_in(key(noise_seed), rnd)`` as one flat ``[N]`` vector that the
+    pytree path slices per leaf in ravel order, so the flat and pytree
+    representations see *bit-identical* noise and stay equivalent under
+    the flat-vs-pytree gate.
+
+    Declares ``requires = ("update_norm",)``: configs must measure the
+    norm criterion, closing the feedback loop — the operator down-weights
+    the very clients whose updates keep hitting the clip.
+    """
+
+    clip_norm: float = 1.0
+    noise_multiplier: float = 0.0
+    noise_seed: int = 0
+
+    requires = ("update_norm",)
+    supports_online_adjust = False
+
+    def step(self, state, inp, cfg, online_adjust, eval_fn):
+        params = state.params
+        p = compute_weights(inp.criteria, cfg, tuple(cfg.priority),
+                            mask=inp.contrib)
+        if _is_flat(inp.stacked):
+            num_params = int(inp.stacked.shape[1])
+            sq = kops.flat_divergence_sq(inp.stacked, params)
+        else:
+            leaves = jax.tree.leaves(inp.stacked)
+            g_leaves = jax.tree.leaves(params)
+            num_params = sum(int(g.size) for g in g_leaves)
+            S = leaves[0].shape[0]
+            sq = jnp.zeros((S,), jnp.float32)
+            for x, g in zip(leaves, g_leaves):
+                d = x.astype(jnp.float32) - g.astype(jnp.float32)[None]
+                sq = sq + jnp.sum(d.reshape(S, -1) ** 2, axis=1)
+        clip = jnp.minimum(
+            1.0, self.clip_norm / jnp.maximum(jnp.sqrt(sq), 1e-12)
+        )
+        q = p * clip                     # combined coefficient on deltas
+        q_sum = jnp.sum(q)
+        if _is_flat(inp.stacked):
+            step_vec = kops.flat_weighted_agg(inp.stacked, q) - q_sum * params
+            new_params = params + step_vec
+        else:
+            new_params = jax.tree.map(
+                lambda s, g: g + jnp.tensordot(q, s, axes=(0, 0)) - q_sum * g,
+                inp.stacked, params,
+            )
+        if self.noise_multiplier > 0.0:
+            n_part = jnp.sum(inp.mask)
+            sigma = self.noise_multiplier * self.clip_norm \
+                / jnp.maximum(n_part, 1.0)
+            nkey = jax.random.fold_in(
+                jax.random.key(self.noise_seed), inp.rnd
+            )
+            z = jax.random.normal(nkey, (num_params,), jnp.float32)
+            if _is_flat(inp.stacked):
+                new_params = new_params + sigma * z
+            else:
+                g_leaves, treedef = jax.tree.flatten(new_params)
+                noisy, off = [], 0
+                for g in g_leaves:
+                    zl = z[off:off + g.size].reshape(g.shape)
+                    noisy.append(g + (sigma * zl).astype(g.dtype))
+                    off += int(g.size)
+                new_params = jax.tree.unflatten(treedef, noisy)
+
+        # all-dropped guard also suppresses the noise: a no-op round must
+        # not random-walk the global model
+        alive = jnp.sum(inp.contrib) > 0
+        new_params = jax.tree.map(
+            lambda a, b: jnp.where(alive, a, b), new_params, params
+        )
+        barrier = jnp.max(inp.dt * inp.mask)
+        new_state = replace(
+            state,
+            params=new_params,
+            last_sync=_scatter_round(state.last_sync, inp.sel, inp.mask,
+                                     inp.rnd, alive.astype(jnp.float32)),
+            sim_time=state.sim_time + jnp.where(alive, barrier, 1.0),
+            commits=state.commits + alive.astype(jnp.int32),
+        )
+        ys = {
+            "entropy": _entropy(p),
+            "priority_idx": state.priority_idx,
+            "backtracked": jnp.asarray(False),
+            "num_evaluated": jnp.asarray(1, jnp.int32),
+        }
+        return new_state, ys
+
+
 STRATEGIES = {
     "sync": SyncStrategy,
     "buffered-async": BufferedAsyncStrategy,
     "fedavg": FedAvgStrategy,
+    "trimmed-mean": TrimmedMeanStrategy,
+    "clipped-dp": ClippedDPStrategy,
 }
 
 

@@ -12,7 +12,9 @@ This module supplies that missing dimension:
   slowdown) held as device-resident arrays so participation can be drawn
   *inside* a jitted round step,
 * named presets ("uniform", "mobile-heavy", "flaky-network",
-  "tiered-fleet") sampled deterministically from a seed,
+  "tiered-fleet") sampled deterministically from a seed, plus three
+  *hostile* presets ("churn", "diurnal", "byzantine") modelling the
+  production failure modes the ROADMAP's north star calls out,
 * :func:`participation` — per-round participation mask + contribution
   scale, composable with the ``mask`` arguments of
   :func:`repro.core.aggregate.compute_weights`,
@@ -36,14 +38,31 @@ scale is ``mask / slowdown`` in [0, 1].  Aggregation uses the
 contribution scale (drops excluded, stragglers down-weighted); criteria
 normalization uses the binary mask (drops excluded from the round's
 normalizing constant).
+
+Hostile extensions (all opt-in via ``None``-defaulted fleet fields, so
+every pre-existing preset keeps its exact random streams bit for bit):
+
+* churn — per-client ``[arrive_round, depart_round)`` liveness windows
+  gate availability deterministically; outside its window a client never
+  participates (population turns over as sessions start and end),
+* diurnal — a fleet-wide sinusoidal wave modulates the on-probability:
+  client ``k`` is on w.p. ``(1 - amp_k) + amp_k * wave(round)``, so
+  trough rounds are starved down to ``1 - amp`` of the fleet,
+* byzantine — a ``corrupt`` 0/1 mask plus static attack metadata; the
+  *simulation* layer injects the attack inside the vmapped local
+  training (see ``federated.attacks``), this module only carries the
+  flags.  Selection policies are deliberately blind to ``corrupt``.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.federated.attacks import corrupt_fleet
 
 #: tier index -> straggler slowdown multiplier (local work per wall-clock).
 TIER_SLOWDOWN = (1.0, 2.0, 4.0)
@@ -63,6 +82,10 @@ class ScenarioConfig:
     period: int = 24               # availability schedule period (rounds)
     seed: int = 0                  # fleet sampling seed (independent of sim seed)
     bias_sampling: bool = False    # weight client *selection* by availability
+    # hostile-preset knobs (read by "byzantine"; ignored elsewhere)
+    corrupt_frac: float = 0.25     # fraction of clients flagged corrupt
+    attack: str = "sign-flip"      # attack name (see federated.attacks.ATTACKS)
+    attack_scale: float = 1.0      # attack magnitude multiplier
 
 
 @jax.tree_util.register_pytree_node_class
@@ -75,6 +98,19 @@ class DeviceFleet:
     * ``dropout_prob````[K]`` float in [0, 1] — per-round upload loss
     * ``duty_cycle``  ``[K]`` float in (0, 1] — fraction of the period on
     * ``phase``       ``[K]`` int32 — offset into the availability period
+
+    Hostile fields, all optional (``None`` = feature off, and *off means
+    bit-identical* to the pre-hostile code paths — the gates are static
+    Python ``is None`` checks, so no extra PRNG splits or ops are traced
+    for clean fleets):
+
+    * ``corrupt``      ``[K]`` float 0/1 — Byzantine clients; paired with
+      the *static* ``attack`` / ``attack_scale`` metadata (aux data, not
+      children, so they pick the injection code path at trace time)
+    * ``arrive_round`` ``[K]`` int32 — first round the client exists
+    * ``depart_round`` ``[K]`` int32 — first round after it leaves
+    * ``diurnal_amp``  ``[K]`` float in [0, 1] — sinusoidal availability
+      wave amplitude (0 = always-on baseline)
     """
 
     tier: jax.Array
@@ -83,15 +119,24 @@ class DeviceFleet:
     duty_cycle: jax.Array
     phase: jax.Array
     period: int = 24
+    corrupt: Optional[jax.Array] = None
+    arrive_round: Optional[jax.Array] = None
+    depart_round: Optional[jax.Array] = None
+    diurnal_amp: Optional[jax.Array] = None
+    attack: str = "sign-flip"
+    attack_scale: float = 1.0
 
     def tree_flatten(self):
         children = (self.tier, self.slowdown, self.dropout_prob,
-                    self.duty_cycle, self.phase)
-        return children, self.period
+                    self.duty_cycle, self.phase, self.corrupt,
+                    self.arrive_round, self.depart_round, self.diurnal_amp)
+        return children, (self.period, self.attack, self.attack_scale)
 
     @classmethod
-    def tree_unflatten(cls, period, children):
-        return cls(*children, period=period)
+    def tree_unflatten(cls, aux, children):
+        period, attack, attack_scale = aux
+        return cls(*children, period=period, attack=attack,
+                   attack_scale=attack_scale)
 
     @property
     def num_clients(self) -> int:
@@ -100,25 +145,34 @@ class DeviceFleet:
     def expected_availability(self) -> jax.Array:
         """[K] expected per-round participation — duty * (1 - dropout).
 
-        Usable as a selection bias for capability-aware sampling
+        A diurnal wave averages to half its amplitude over a period, so
+        it contributes a ``1 - amp/2`` factor.  Churn windows are *not*
+        folded in (their effect depends on the horizon, and a departed
+        client should not look half-available — selection handles them
+        through the mask, not through this prior).  Usable as a selection
+        bias for capability-aware sampling
         (``sample_clients_jax(weights=...)``).
         """
-        return self.duty_cycle * (1.0 - self.dropout_prob)
+        ea = self.duty_cycle * (1.0 - self.dropout_prob)
+        if self.diurnal_amp is not None:
+            ea = ea * (1.0 - 0.5 * self.diurnal_amp)
+        return ea
 
 
-def _uniform(key, n: int, period: int) -> DeviceFleet:
+def _uniform(key, n: int, cfg: ScenarioConfig) -> DeviceFleet:
     return DeviceFleet(
         tier=jnp.zeros((n,), jnp.int32),
         slowdown=jnp.ones((n,), jnp.float32),
         dropout_prob=jnp.zeros((n,), jnp.float32),
         duty_cycle=jnp.ones((n,), jnp.float32),
         phase=jnp.zeros((n,), jnp.int32),
-        period=period,
+        period=cfg.period,
     )
 
 
-def _mobile_heavy(key, n: int, period: int) -> DeviceFleet:
+def _mobile_heavy(key, n: int, cfg: ScenarioConfig) -> DeviceFleet:
     """80% phones: tight duty cycles, mild dropout, 2-4x slowdowns."""
+    period = cfg.period
     k1, k2, k3, k4 = jax.random.split(key, 4)
     is_phone = jax.random.bernoulli(k1, 0.8, (n,))
     tier = jnp.where(
@@ -136,20 +190,21 @@ def _mobile_heavy(key, n: int, period: int) -> DeviceFleet:
     )
 
 
-def _flaky_network(key, n: int, period: int) -> DeviceFleet:
+def _flaky_network(key, n: int, cfg: ScenarioConfig) -> DeviceFleet:
     """Uniform compute, always on, but heavy-tailed per-round upload loss."""
-    base = _uniform(key, n, period)
+    base = _uniform(key, n, cfg)
     # Beta(1, 3): most clients near 0, a tail reaching ~0.8 dropout.
     drop = jax.random.beta(key, 1.0, 3.0, (n,)) * 0.8
     return DeviceFleet(
         tier=base.tier, slowdown=base.slowdown,
         dropout_prob=drop.astype(jnp.float32),
-        duty_cycle=base.duty_cycle, phase=base.phase, period=period,
+        duty_cycle=base.duty_cycle, phase=base.phase, period=cfg.period,
     )
 
 
-def _tiered_fleet(key, n: int, period: int) -> DeviceFleet:
+def _tiered_fleet(key, n: int, cfg: ScenarioConfig) -> DeviceFleet:
     """Three compute tiers (50/30/20), reliability tracking the tier."""
+    period = cfg.period
     k1, k2 = jax.random.split(key)
     u = jax.random.uniform(k1, (n,))
     tier = (u > 0.5).astype(jnp.int32) + (u > 0.8).astype(jnp.int32)
@@ -163,7 +218,74 @@ def _tiered_fleet(key, n: int, period: int) -> DeviceFleet:
     )
 
 
-#: preset name -> fleet sampler ``(key, num_clients, period) -> DeviceFleet``:
+def _churn(key, n: int, cfg: ScenarioConfig) -> DeviceFleet:
+    """Session churn: clients arrive and depart on liveness windows.
+
+    Half the fleet is stable (present from round 0, never departs); the
+    other half arrives staggered over the first two periods and stays for
+    a 1-4 period session, so the effective population re-keys as the run
+    progresses and no selection policy can rely on a fixed roster.
+    """
+    period = cfg.period
+    base = _uniform(key, n, cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    stayer = jax.random.bernoulli(k1, 0.5, (n,))
+    arrive = jnp.where(
+        stayer, 0, jax.random.randint(k2, (n,), 0, 2 * period)
+    ).astype(jnp.int32)
+    life = period + jax.random.randint(k3, (n,), 0, 3 * period)
+    depart = jnp.where(stayer, jnp.int32(2 ** 30), arrive + life)
+    return dataclasses.replace(
+        base, arrive_round=arrive, depart_round=depart.astype(jnp.int32)
+    )
+
+
+def _diurnal(key, n: int, cfg: ScenarioConfig) -> DeviceFleet:
+    """Sinusoidal availability waves: peak rounds full, troughs starved.
+
+    Uniform compute, no dropout, but a fleet-synchronized day/night wave
+    with per-client amplitude 0.7-0.95 and small phase jitter: at the
+    trough a client is on only w.p. ``1 - amp`` (5-30%), so off-peak
+    rounds run on a sliver of the fleet — the async-vs-sync stress case.
+    """
+    period = cfg.period
+    base = _uniform(key, n, cfg)
+    k1, k2 = jax.random.split(key)
+    amp = jax.random.uniform(k1, (n,), minval=0.7, maxval=0.95)
+    phase = jax.random.randint(k2, (n,), 0, max(1, period // 8))
+    return dataclasses.replace(
+        base, phase=phase, diurnal_amp=amp.astype(jnp.float32)
+    )
+
+
+def _byzantine(key, n: int, cfg: ScenarioConfig) -> DeviceFleet:
+    """Tiered fleet with a corrupt fraction planted in the fastest tier.
+
+    ``cfg.corrupt_frac`` of the clients emit ``cfg.attack`` payloads
+    (scaled by ``cfg.attack_scale``); on top of the `tiered-fleet` base,
+    every attacker is promoted to tier 0 with perfect availability — the
+    exact profile a latency-greedy selection policy favors.  Robustness
+    must therefore come from aggregation (trimmed mean / clipping), not
+    from selection peeking at ``corrupt`` — policies are contractually
+    blind to it (see ``federated.selection``).
+    """
+    fleet = _tiered_fleet(key, n, cfg)
+    fleet = corrupt_fleet(fleet, cfg.corrupt_frac, attack=cfg.attack,
+                          scale=cfg.attack_scale, seed=cfg.seed)
+    if fleet.corrupt is None:                      # corrupt_frac == 0
+        return fleet
+    bad = fleet.corrupt > 0
+    tier = jnp.where(bad, 0, fleet.tier).astype(jnp.int32)
+    return dataclasses.replace(
+        fleet,
+        tier=tier,
+        slowdown=jnp.asarray(TIER_SLOWDOWN, jnp.float32)[tier],
+        dropout_prob=jnp.where(bad, 0.0, fleet.dropout_prob).astype(jnp.float32),
+        duty_cycle=jnp.where(bad, 1.0, fleet.duty_cycle).astype(jnp.float32),
+    )
+
+
+#: preset name -> fleet sampler ``(key, num_clients, cfg) -> DeviceFleet``:
 #:   * ``uniform``       — identity fleet: always on, no dropout, 1x compute
 #:     (reproduces mask-free runs bit for bit — the golden-test preset)
 #:   * ``mobile-heavy``  — 80% phones: 0.3-0.7 duty cycles, 10% dropout,
@@ -172,11 +294,21 @@ def _tiered_fleet(key, n: int, period: int) -> DeviceFleet:
 #:     per-round upload loss (up to ~0.8)
 #:   * ``tiered-fleet``  — 50/30/20% compute tiers (1x/2x/4x) with dropout
 #:     and duty cycle degrading by tier — the straggler-barrier benchmark
+#: hostile presets (see the module docstring's threat model):
+#:   * ``churn``         — half the fleet on staggered arrive/depart
+#:     session windows; the population re-keys over the run
+#:   * ``diurnal``       — fleet-synchronized sinusoidal availability wave
+#:     (amplitude 0.7-0.95): trough rounds are starved to 5-30% of peak
+#:   * ``byzantine``     — tiered fleet + ``corrupt_frac`` attackers
+#:     (``attack`` / ``attack_scale`` knobs) promoted to the fastest tier
 PRESETS: Dict[str, object] = {
     "uniform": _uniform,
     "mobile-heavy": _mobile_heavy,
     "flaky-network": _flaky_network,
     "tiered-fleet": _tiered_fleet,
+    "churn": _churn,
+    "diurnal": _diurnal,
+    "byzantine": _byzantine,
 }
 
 
@@ -188,7 +320,7 @@ def make_fleet(cfg: ScenarioConfig, num_clients: int) -> DeviceFleet:
             f"{sorted(PRESETS)}"
         )
     key = jax.random.key(cfg.seed)
-    return PRESETS[cfg.preset](key, num_clients, cfg.period)
+    return PRESETS[cfg.preset](key, num_clients, cfg)
 
 
 def completion_time(
@@ -222,11 +354,29 @@ def participation(
     ``mask[S]`` is binary participation (available and upload survived);
     ``contribution[S] = mask / slowdown`` additionally down-weights
     stragglers.  Pure jnp — safe inside jit / ``lax.scan``.
+
+    Hostile gates are static ``is None`` checks, so fleets without the
+    optional fields trace the exact pre-hostile program — in particular
+    the dropout bernoulli keeps consuming the *whole* ``key`` (no extra
+    split) unless a diurnal wave needs its own draw, preserving every
+    golden trajectory bit for bit.
     """
     duty = fleet.duty_cycle[sel]
     phase = fleet.phase[sel]
     pos = jnp.mod(round_idx + phase, fleet.period).astype(jnp.float32)
     avail = (pos < duty * fleet.period).astype(jnp.float32)
+    if fleet.arrive_round is not None:
+        avail = avail * (round_idx >= fleet.arrive_round[sel]).astype(jnp.float32)
+    if fleet.depart_round is not None:
+        avail = avail * (round_idx < fleet.depart_round[sel]).astype(jnp.float32)
+    if fleet.diurnal_amp is not None:
+        key, k_wave = jax.random.split(key)
+        amp = fleet.diurnal_amp[sel]
+        angle = 2.0 * jnp.pi * (round_idx + phase).astype(jnp.float32) \
+            / fleet.period
+        wave = 0.5 * (1.0 + jnp.sin(angle))          # 1 at peak, 0 at trough
+        p_on = (1.0 - amp) + amp * wave
+        avail = avail * jax.random.bernoulli(k_wave, p_on).astype(jnp.float32)
     drop = jax.random.bernoulli(key, fleet.dropout_prob[sel]).astype(jnp.float32)
     mask = avail * (1.0 - drop)
     contribution = mask / fleet.slowdown[sel]

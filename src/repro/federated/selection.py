@@ -40,6 +40,20 @@ Adding a policy: subclass :class:`SelectionPolicy`, implement
 ``select``, register it in :data:`POLICIES` — the engine, the benchmark
 sweep (``benchmarks/roundloop.py``) and the Mode-B helper
 (:func:`round_participation`) pick it up by name.
+
+Corruption blindness (hostile-fleet contract): policies may read the
+fleet's *device* profile — ``slowdown``, ``expected_availability()``,
+``last_sync`` — but MUST NOT read ``DeviceFleet.corrupt`` or the attack
+metadata.  A real server cannot observe which clients are Byzantine, and
+the ``byzantine`` preset deliberately plants its attackers in the fastest
+tier with perfect availability — exactly the clients a latency-greedy
+policy prefers — so any policy that "defends" by peeking at the mask is
+cheating and any policy that *learns to prefer* fast attackers is working
+as designed: the defense belongs to the aggregation layer
+(``TrimmedMeanStrategy`` / ``ClippedDPStrategy`` + the ``update_norm``
+criterion).  ``tests/test_robust.py`` pins this down by asserting every
+registered policy draws identical rounds with and without the corrupt
+mask present.
 """
 from __future__ import annotations
 

@@ -365,7 +365,31 @@ class FederatedSimulation:
         flat = self._flat
         fspec = self._fspec
 
-        def one_client(global_params, images, labels, plan):
+        # Byzantine injection is static: only fleets carrying a corrupt
+        # mask trace the attack (honest runs keep their exact programs and
+        # PRNG streams).  The attack rewrites the client's *trained*
+        # pytree before the flat path ravels, so both representations see
+        # bit-identical corruption from one injection point.
+        corrupt_on = fleet is not None and fleet.corrupt is not None
+        if corrupt_on:
+            from repro.federated.attacks import apply_attack
+
+            attack_name = fleet.attack
+            attack_scale = float(fleet.attack_scale)
+
+            def one_client(global_params, images, labels, plan,
+                           corrupt_k, attack_key):
+                trained = _one_client_honest(global_params, images, labels,
+                                             plan)
+                return apply_attack(attack_name, trained, global_params,
+                                    corrupt_k, attack_scale, attack_key)
+
+            train_axes = (None, 0, 0, 0, 0, 0)
+        else:
+            one_client = None
+            train_axes = (None, 0, 0, 0)
+
+        def _one_client_honest(global_params, images, labels, plan):
             opt_state = opt.init(global_params)
 
             def step(carry, idx):
@@ -380,18 +404,20 @@ class FederatedSimulation:
             (params, _), _ = jax.lax.scan(step, (global_params, opt_state), plan)
             return params
 
+        if one_client is None:
+            one_client = _one_client_honest
+
         if flat:
             # ravel inside the vmapped client so the [S, N] matrix is
             # local_train's direct output — the stacked pytree never
             # materializes as a separate buffer (an extra S*N-sized copy
             # per round otherwise)
-            def one_client_flat(global_params, images, labels, plan):
-                return fspec.ravel(one_client(global_params, images,
-                                              labels, plan))
+            def one_client_flat(global_params, *rest):
+                return fspec.ravel(one_client(global_params, *rest))
 
-            local_train = jax.vmap(one_client_flat, in_axes=(None, 0, 0, 0))
+            local_train = jax.vmap(one_client_flat, in_axes=train_axes)
         else:
-            local_train = jax.vmap(one_client, in_axes=(None, 0, 0, 0))
+            local_train = jax.vmap(one_client, in_axes=train_axes)
 
         def round_step(state: ServerState, rnd):
             params = state.params
@@ -414,8 +440,16 @@ class FederatedSimulation:
             # flat mode: local_train already emits the [S, N] matrix —
             # everything downstream (criteria, weighting, aggregation,
             # the candidate sweep) streams over it
-            stacked = local_train(model_params, self.images[sel],
-                                  self.labels[sel], plans)
+            if corrupt_on:
+                # dedicated stream (fold index 4) so hostile runs perturb
+                # no existing randomness; one key per (round, client)
+                atk_keys = jax.random.split(jax.random.fold_in(key, 4), S)
+                stacked = local_train(model_params, self.images[sel],
+                                      self.labels[sel], plans,
+                                      fleet.corrupt[sel], atk_keys)
+            else:
+                stacked = local_train(model_params, self.images[sel],
+                                      self.labels[sel], plans)
 
             if fleet is not None:
                 mask, contrib = participation(fleet, sel, rnd, k_scen)

@@ -2,6 +2,8 @@
 
 * ``weighted_agg``   — fused multi-client weighted parameter aggregation
 * ``divergence``     — fused per-client L2 divergence (criterion Md)
+* ``trimmed``        — fused coordinate-wise weighted trimmed mean
+                       (robust aggregation, peel-reduce instead of sort)
 * ``flash_attention``— blockwise attention w/ GQA + sliding window
 * ``ref``            — pure-jnp oracles (+ attention_chunked, the XLA-level
                        online-softmax attention used by the serving path)

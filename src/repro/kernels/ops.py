@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.divergence import divergence_sq
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.trimmed import trimmed_agg
 from repro.kernels.weighted_agg import weighted_agg
 from repro.utils.pytree import PyTree
 
@@ -85,6 +86,52 @@ def flat_divergence_sq(
         return divergence_sq(stacked, global_vec, block_n=block_n,
                              interpret=interp)
     return ref.divergence_ref(stacked, global_vec)
+
+
+def flat_trimmed_agg(
+    stacked: jax.Array,
+    weights: jax.Array,
+    trim: int,
+    interpret: Optional[bool] = None,
+    block_n: int = 2048,
+) -> jax.Array:
+    """Coordinate-wise weighted trimmed mean ``[N]`` on the flat path.
+
+    The robust-aggregation reduction: per coordinate drop the ``trim``
+    largest and smallest client values, weighted-mean the survivors.  One
+    fused peel-reduce pass (see ``kernels/trimmed.py``) on TPU, the
+    stable-argsort jnp reference elsewhere — both share tie rules, so the
+    two backends trim identical client sets even on duplicate values.
+    """
+    use_pallas, interp = resolve_kernel_mode(interpret)
+    if use_pallas:
+        return trimmed_agg(stacked, weights, trim, block_n=block_n,
+                           interpret=interp)
+    return ref.trimmed_agg_ref(stacked, weights, trim)
+
+
+def tree_trimmed_agg(stacked: PyTree, weights: jax.Array, trim: int,
+                     interpret: Optional[bool] = None) -> PyTree:
+    """Per-leaf coordinate-wise trimmed mean over a stacked-client pytree.
+
+    Each leaf ``[K, ...]`` is viewed as ``[K, N]`` and reduced with
+    :func:`flat_trimmed_agg`; tiny leaves (< 1 lane row) go straight to
+    the jnp reference.  Because the reduction is independent per
+    coordinate, this matches the flat-path result leaf-slice for
+    leaf-slice — the basis of the flat-vs-pytree equivalence gate for
+    ``TrimmedMeanStrategy``.
+    """
+    def _one(leaf: jax.Array) -> jax.Array:
+        K = leaf.shape[0]
+        n = int(leaf.size) // K
+        flat = leaf.reshape(K, n)
+        if n < 128:
+            out = ref.trimmed_agg_ref(flat, weights, trim)
+        else:
+            out = flat_trimmed_agg(flat, weights, trim, interpret=interpret)
+        return out.reshape(leaf.shape[1:])
+
+    return jax.tree.map(_one, stacked)
 
 
 def tree_weighted_agg(stacked: PyTree, weights: jax.Array,

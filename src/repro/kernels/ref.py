@@ -33,6 +33,40 @@ def divergence_ref(stacked: jax.Array, global_vec: jax.Array) -> jax.Array:
     return jnp.sum(d * d, axis=1)
 
 
+def trimmed_agg_ref(stacked: jax.Array, weights: jax.Array,
+                    trim: int) -> jax.Array:
+    """Coordinate-wise weighted trimmed mean, accumulated in f32.
+
+    ``stacked``: [K, N] (any float dtype); ``weights``: [K] f32;
+    ``trim``: values removed *per side* per coordinate (``2*trim < K``).
+
+    Per coordinate the ``trim`` smallest and ``trim`` largest values are
+    discarded (stable ascending order, so among duplicates the lowest
+    client indices trim at the bottom and the highest at the top — the
+    Pallas kernel's peel order matches this tie rule exactly) and the
+    survivors are combined by their normalized weights.  If the surviving
+    weight mass is ~0 (e.g. every participant of a sparse round got
+    trimmed) the unweighted mean of the survivors is used instead, so the
+    output stays finite; the engine's all-dropped guard handles the
+    no-participant case above this layer.
+
+    Returns the same dtype as ``stacked``.
+    """
+    K, _ = stacked.shape
+    if not 0 <= 2 * trim < K:
+        raise ValueError(f"need 0 <= 2*trim < K, got trim={trim} K={K}")
+    x = stacked.astype(jnp.float32)
+    order = jnp.argsort(x, axis=0)                      # stable by default
+    xs = jnp.take_along_axis(x, order, axis=0)
+    ws = weights.astype(jnp.float32)[order]
+    keep = jnp.zeros((K, 1), jnp.float32).at[trim:K - trim].set(1.0)
+    num = jnp.sum(xs * ws * keep, axis=0)
+    den = jnp.sum(ws * keep, axis=0)
+    fallback = jnp.sum(xs * keep, axis=0) / float(K - 2 * trim)
+    out = jnp.where(den > 1e-12, num / jnp.maximum(den, 1e-12), fallback)
+    return out.astype(stacked.dtype)
+
+
 def attention_ref(
     q: jax.Array,
     k: jax.Array,

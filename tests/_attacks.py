@@ -1,0 +1,91 @@
+"""Reusable fault-injection harness for the hostile-fleet test suite.
+
+Thin test-side facade over :mod:`repro.federated.attacks` (the attack
+transforms and fleet corruptors ship in ``src/`` so benchmarks can use
+them too) plus test-only builders that the robustness tests share:
+
+* :func:`iid_reshard` — reshuffle a ``FederatedDataset``'s samples
+  uniformly across clients.  The separation test uses it deliberately:
+  Byzantine-robust aggregation theory (trimmed mean, clipping) assumes
+  honest updates concentrate; on IID shards the honest cohort stays
+  coherent all the way to convergence, so any residual accuracy gap is
+  attributable to the *attack*, not to client drift.  Heterogeneity is
+  exercised by the scenario suite elsewhere.
+* :func:`hostile_matrix` — a ``[S, N]`` client-update matrix with a
+  bounded honest band and ``num_bad`` planted outlier rows, for
+  breakdown-point property tests.
+* :func:`corrupt_sim` — flag a fraction of a built simulation's fleet
+  corrupt and rebuild its jitted round step / run block so the injection
+  is live (the documented pattern for mutating ``sim.fleet`` after
+  construction).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.federated.attacks import (  # noqa: F401  (re-exports)
+    ATTACKS,
+    apply_attack,
+    corrupt_fleet,
+    get_attack,
+)
+
+
+def iid_reshard(data, seed: int = 0):
+    """Return a copy of ``data`` with train/test samples shuffled IID
+    across clients (per-client counts preserved)."""
+    rng = np.random.default_rng(seed)
+
+    def mix(images, labels, counts):
+        ks = range(images.shape[0])
+        pool_i = np.concatenate([images[k, : int(counts[k])] for k in ks])
+        pool_l = np.concatenate([labels[k, : int(counts[k])] for k in ks])
+        perm = rng.permutation(len(pool_l))
+        pool_i, pool_l = pool_i[perm], pool_l[perm]
+        new_i, new_l = np.zeros_like(images), np.zeros_like(labels)
+        off = 0
+        for k in ks:
+            n = int(counts[k])
+            new_i[k, :n] = pool_i[off:off + n]
+            new_l[k, :n] = pool_l[off:off + n]
+            off += n
+        return new_i, new_l
+
+    tr_i, tr_l = mix(data.images, data.labels, data.counts)
+    te_i, te_l = mix(data.test_images, data.test_labels, data.test_counts)
+    return dataclasses.replace(
+        data, images=tr_i, labels=tr_l, test_images=te_i, test_labels=te_l
+    )
+
+
+def hostile_matrix(seed: int, S: int, N: int, num_bad: int,
+                   spread: float = 1.0, outlier: float = 50.0):
+    """``[S, N]`` update matrix: honest rows in ``[-spread, spread]``,
+    ``num_bad`` rows pushed out by ``±outlier`` per coordinate.
+
+    Returns ``(stacked, honest)`` where ``honest`` is the ``[S]`` boolean
+    honest-row mask.  Outlier signs vary per coordinate so both trim
+    sides are exercised.
+    """
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-spread, spread, (S, N)).astype(np.float32)
+    honest = np.ones(S, bool)
+    if num_bad:
+        bad = rng.choice(S, size=num_bad, replace=False)
+        honest[bad] = False
+        signs = rng.choice([-1.0, 1.0], size=(num_bad, N))
+        x[bad] = (signs * outlier).astype(np.float32)
+    return x, honest
+
+
+def corrupt_sim(sim, frac: float, attack: str = "sign-flip",
+                scale: float = 1.0, seed: int = 0):
+    """Corrupt ``frac`` of ``sim``'s fleet and rebuild its jitted steps."""
+    sim.fleet = corrupt_fleet(sim.fleet, frac, attack, scale=scale,
+                              seed=seed)
+    sim._round_step = sim._build_round_step()
+    sim._run_block = jax.jit(sim._build_run_block(), donate_argnums=(0,))
+    return sim

@@ -1,0 +1,115 @@
+"""Schema gate for the benchmark harness artifacts.
+
+Two layers:
+
+* fast — the committed ``BENCH_roundloop.json`` carries every section
+  the README documents (``dispatch``/``strategies``/``selection``/
+  ``robust``/``hotpath``) with well-formed per-run records, and
+  ``benchmarks/README.md`` documents each one.  This is the contract
+  PRs diff trajectory numbers against: a section silently dropped from
+  the harness shows up here, not three PRs later.
+* slow — ``python -m benchmarks.run --smoke --out <tmp>`` actually
+  executes end to end and emits the same sections, so the harness entry
+  point (not just ``roundloop.main``) cannot rot.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH = os.path.join(ROOT, "BENCH_roundloop.json")
+README = os.path.join(ROOT, "benchmarks", "README.md")
+
+SECTIONS = ("dispatch", "strategies", "selection", "robust", "hotpath")
+
+#: fields every _run_to_target-style record carries
+RUN_FIELDS = ("rounds_run", "final_acc", "best_acc", "commits",
+              "sim_time_total", "rounds_to_target", "sim_time_to_target")
+
+
+@pytest.fixture(scope="module")
+def bench():
+    with open(BENCH) as f:
+        return json.load(f)
+
+
+def _check_run_record(rec):
+    for field in RUN_FIELDS:
+        assert field in rec, f"missing {field}"
+    assert np.isfinite(rec["final_acc"]) and np.isfinite(rec["best_acc"])
+    assert 0.0 <= rec["best_acc"] <= 1.0
+    assert rec["best_acc"] >= rec["final_acc"] - 1e-9
+    assert rec["rounds_run"] > 0
+    assert rec["sim_time_total"] > 0
+
+
+class TestCommittedSchema:
+    def test_all_sections_present(self, bench):
+        for section in SECTIONS:
+            assert section in bench, f"BENCH_roundloop.json lost '{section}'"
+
+    def test_dispatch_fields(self, bench):
+        d = bench["dispatch"]
+        assert d["host_rounds_per_sec"] > 0
+        assert d["scan_rounds_per_sec"] > 0
+        assert d["scan_speedup"] == pytest.approx(
+            d["scan_rounds_per_sec"] / d["host_rounds_per_sec"], rel=1e-6)
+
+    def test_strategy_records(self, bench):
+        s = bench["strategies"]
+        for name in ("sync", "async"):
+            _check_run_record(s[name])
+            assert s[name]["rounds_per_sec"] > 0
+
+    def test_selection_covers_policy_grid(self, bench):
+        sel = bench["selection"]
+        for pname in sel["policies"]:
+            for sname in ("sync", "async"):
+                _check_run_record(sel[f"{pname}/{sname}"])
+
+    def test_robust_covers_preset_strategy_grid(self, bench):
+        rob = bench["robust"]
+        assert sorted(rob["presets"]) == ["byzantine", "churn", "diurnal"]
+        assert sorted(rob["strategies"]) == \
+            ["clipped-dp", "sync", "trimmed-mean"]
+        assert rob["attack"]["name"] == "sign-flip"
+        assert 0.0 < rob["attack"]["frac"] < 0.5
+        for preset in rob["presets"]:
+            for sname in rob["strategies"]:
+                _check_run_record(rob[f"{preset}/{sname}"])
+
+    def test_hotpath_headline_fields(self, bench):
+        h = bench["hotpath"]
+        assert h["block"]["flat_speedup"] > 0
+        assert h["workload"]["num_params"] > 1_000_000
+
+    def test_readme_documents_every_section(self):
+        with open(README) as f:
+            text = f.read()
+        for section in SECTIONS:
+            assert f"### `{section}`" in text, \
+                f"benchmarks/README.md missing schema docs for '{section}'"
+
+
+@pytest.mark.slow
+class TestSmokeHarness:
+    def test_run_smoke_emits_full_schema(self, tmp_path):
+        out = tmp_path / "bench_smoke.json"
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(ROOT, "src"),
+                   JAX_PLATFORM_NAME="cpu")
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--smoke",
+             "--out", str(out)],
+            cwd=ROOT, env=env, capture_output=True, text=True, timeout=1200)
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        smoke = json.loads(out.read_text())
+        for section in SECTIONS:
+            assert section in smoke
+        for preset in smoke["robust"]["presets"]:
+            for sname in smoke["robust"]["strategies"]:
+                _check_run_record(smoke["robust"][f"{preset}/{sname}"])

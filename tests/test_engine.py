@@ -37,6 +37,8 @@ from repro.federated.simulation import FederatedSimulation, FedSimConfig
 
 GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)), "golden",
                       "engine_uniform.json")
+GOLDEN_ASYNC = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "golden", "engine_async.json")
 
 
 @pytest.fixture(scope="module")
@@ -277,6 +279,36 @@ class TestEngineEndToEnd:
             aggregation=AggregationConfig(criteria=("Ds",), priority=(0,)),
             scenario=ScenarioConfig()))
         assert fa == ds
+
+    def test_async_matches_recorded_golden_bitforbit(self, small_data,
+                                                     mlp_params):
+        """BufferedAsyncStrategy reproduces its recorded golden trajectory
+        bit for bit (``tools/record_goldens.py``) — the async analogue of
+        the sync golden above, pinning buffer lifecycle, staleness
+        weighting and the async virtual clock against drive-by changes."""
+        with open(GOLDEN_ASYNC) as f:
+            golden = json.load(f)
+        g = golden["config"]
+        cfg = FedSimConfig(
+            fraction=g["fraction"], batch_size=g["batch_size"],
+            local_epochs=g["local_epochs"], lr=g["lr"],
+            max_rounds=g["max_rounds"], eval_every=g["eval_every"],
+            aggregation=AggregationConfig(criteria=tuple(g["criteria"]),
+                                          priority=tuple(g["priority"])),
+            strategy=BufferedAsyncStrategy(buffer_size=g["buffer_size"]),
+            scenario=ScenarioConfig(preset=g["preset"],
+                                    seed=g["scenario_seed"]),
+        )
+        sim = FederatedSimulation(small_data, mlp_params, mlp_loss,
+                                  mlp_accuracy, cfg)
+        res = sim.run(targets=(0.99,), device_fracs=(0.99,), verbose=False)
+        assert [m.round for m in res.metrics] == golden["rounds"]
+        assert [float(m.global_acc) for m in res.metrics] == \
+            golden["global_acc"]
+        assert [float(m.weights_entropy) for m in res.metrics] == \
+            golden["weights_entropy"]
+        assert [float(m.sim_time) for m in res.metrics] == golden["sim_time"]
+        assert int(res.final_state.commits) == golden["commits"]
 
     def test_async_commits_and_learns_on_tiered_fleet(self, small_data,
                                                       mlp_params):

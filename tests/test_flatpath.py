@@ -28,7 +28,12 @@ from _helpers import init_mlp_params, mlp_accuracy, mlp_loss
 from repro.core import AggregationConfig, adjust_round_vectorized, criterion_needs
 from repro.core.aggregate import aggregate_models
 from repro.data.synthetic import make_synth_femnist
-from repro.federated import BufferedAsyncStrategy, ScenarioConfig
+from repro.federated import (
+    BufferedAsyncStrategy,
+    ClippedDPStrategy,
+    ScenarioConfig,
+    TrimmedMeanStrategy,
+)
 from repro.federated.simulation import FederatedSimulation, FedSimConfig
 from repro.kernels import ops as kops
 from repro.utils.pytree import (
@@ -222,6 +227,16 @@ def _traj(data, params, flat, preset, mode, rounds=4, block=2):
                 priority=(0, 1, 2, 3)),
             strategy=BufferedAsyncStrategy(buffer_size=6),
         )
+    elif mode == "trimmed":
+        kw = dict(aggregation=AggregationConfig(priority=(2, 0, 1)),
+                  strategy=TrimmedMeanStrategy(trim=1))
+    elif mode == "clipped":
+        kw = dict(
+            aggregation=AggregationConfig(
+                criteria=("Ds", "Ld", "Md", "update_norm"),
+                priority=(3, 2, 0, 1)),
+            strategy=ClippedDPStrategy(clip_norm=0.5, noise_multiplier=0.3),
+        )
     else:
         kw = dict(aggregation=AggregationConfig(priority=(2, 0, 1)),
                   online_adjust=(mode == "adjust"))
@@ -245,6 +260,27 @@ def test_flat_matches_pytree_trajectory(small_data, mlp_params, preset, mode):
             [getattr(m, field) for m in flat.metrics],
             rtol=1e-5, atol=1e-6, err_msg=f"{preset}/{mode}/{field}")
     # the flat carry unravels back to the reference final model
+    for a, b in zip(jax.tree.leaves(ref.final_params),
+                    jax.tree.leaves(flat.final_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["trimmed", "clipped"])
+def test_flat_matches_pytree_robust_strategies(small_data, mlp_params, mode):
+    """Both robust strategies pass the equivalence gate on a corrupt
+    fleet: the ``byzantine`` preset injects sign-flipped payloads inside
+    the vmapped ``local_train``, so the corruption itself — and the
+    trimmed/clipped commit on top of it — must agree between the flat
+    ``[S, N]`` and per-leaf pytree representations (incl. ClippedDP's
+    Gaussian noise, drawn once flat and sliced per leaf)."""
+    ref = _traj(small_data, mlp_params, False, "byzantine", mode)
+    flat = _traj(small_data, mlp_params, True, "byzantine", mode)
+    for field in ("global_acc", "weights_entropy", "sim_time"):
+        np.testing.assert_allclose(
+            [getattr(m, field) for m in ref.metrics],
+            [getattr(m, field) for m in flat.metrics],
+            rtol=1e-5, atol=1e-6, err_msg=f"byzantine/{mode}/{field}")
     for a, b in zip(jax.tree.leaves(ref.final_params),
                     jax.tree.leaves(flat.final_params)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),

@@ -1,0 +1,430 @@
+"""Hostile-fleet gate: attacks, robust aggregation, and the separation.
+
+The adversarial half of the scenario suite, built on the reusable
+fault-injection harness in ``tests/_attacks.py``:
+
+* attack-unit tests — honest clients bit-identical, corrupt counts,
+  keyed randomness,
+* the trimmed-mean kernel against a stable-argsort oracle (including
+  duplicate-value tie rules) and its breakdown-point property: up to
+  ``trim`` planted outlier rows per side cannot move any coordinate of
+  the commit outside the honest value range,
+* ``ClippedDPStrategy``: the committed step is norm-bounded by
+  ``clip_norm`` no matter what clients send, and its Gaussian noise is
+  deterministic per ``(noise_seed, round)``,
+* corruption blindness — every selection policy draws the *same* cohort
+  whether or not the fleet carries a corrupt mask (byzantine presets
+  plant attackers in the fastest tier precisely because latency-greedy
+  policies would otherwise learn to prefer them),
+* hostile-preset invariants (churn gating, diurnal waves, byzantine
+  promotion), and
+* the headline separation: 25% sign-flipping clients on ``tiered-fleet``
+  — ``TrimmedMeanStrategy`` holds >= 0.7 best-accuracy while plain
+  ``SyncStrategy`` degrades far below it.  The fixture reshards the
+  synthetic data IID (see ``_attacks.iid_reshard``) so honest updates
+  stay coherent and the measured gap isolates the attack.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _attacks import (
+    ATTACKS,
+    apply_attack,
+    corrupt_fleet,
+    corrupt_sim,
+    get_attack,
+    hostile_matrix,
+    iid_reshard,
+)
+from _helpers import init_mlp_params, mlp_accuracy, mlp_loss
+from _propcheck import given, settings, st
+from repro.core import AggregationConfig, normalize_criteria
+from repro.core.criteria import ClientContext, criterion_needs, get_criterion
+from repro.data.synthetic import make_synth_femnist
+from repro.federated import (
+    POLICIES,
+    ClippedDPStrategy,
+    FederatedSimulation,
+    FedSimConfig,
+    RoundInputs,
+    ScenarioConfig,
+    TrimmedMeanStrategy,
+    make_fleet,
+    make_strategy,
+    participation,
+    round_participation,
+)
+from repro.kernels import ops as kops
+from repro.kernels.ref import trimmed_agg_ref
+from repro.kernels.trimmed import trimmed_agg
+
+CFG3 = AggregationConfig(priority=(0, 1, 2))
+
+
+def _toy_inputs(stacked, rnd=3, contrib=None, dt=None):
+    """Flat-path RoundInputs around a hand-built ``[S, N]`` matrix."""
+    stacked = jnp.asarray(stacked, jnp.float32)
+    S = stacked.shape[0]
+    contrib = jnp.ones((S,), jnp.float32) if contrib is None else contrib
+    return RoundInputs(
+        rnd=jnp.asarray(rnd, jnp.int32),
+        sel=jnp.arange(S, dtype=jnp.int32),
+        stacked=stacked,
+        criteria=normalize_criteria(jnp.ones((S, 3)), None),
+        mask=(contrib > 0).astype(jnp.float32),
+        contrib=contrib,
+        dt=jnp.ones((S,), jnp.float32) if dt is None else dt,
+    )
+
+
+# ---------------------------------------------------------------------------
+# attack units
+# ---------------------------------------------------------------------------
+
+class TestAttackUnits:
+    def test_registry(self):
+        assert sorted(ATTACKS) == ["random", "scale", "sign-flip"]
+        with pytest.raises(KeyError, match="unknown attack"):
+            get_attack("gradient-eating-gremlin")
+
+    def test_honest_client_bit_identical(self):
+        """corrupt=0 returns the trained pytree untouched, bit for bit."""
+        k = jax.random.key(0)
+        trained = {"w": jax.random.normal(k, (5, 3)), "b": jnp.ones((3,))}
+        g = jax.tree.map(jnp.zeros_like, trained)
+        for name in ATTACKS:
+            out = apply_attack(name, trained, g, jnp.asarray(0.0), 7.0, k)
+            for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(trained)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_sign_flip_negates_delta(self):
+        trained = {"w": jnp.asarray([3.0, -1.0])}
+        g = {"w": jnp.asarray([1.0, 1.0])}
+        out = apply_attack("sign-flip", trained, g, jnp.asarray(1.0), 2.0,
+                           jax.random.key(0))
+        # delta = (2, -2); corrupted = g - 2 * delta = (-3, 5)
+        np.testing.assert_allclose(np.asarray(out["w"]), [-3.0, 5.0],
+                                   rtol=1e-6)
+
+    def test_random_attack_is_keyed(self):
+        trained = {"w": jnp.ones((8,))}
+        g = {"w": jnp.zeros((8,))}
+        one = jnp.asarray(1.0)
+        a = apply_attack("random", trained, g, one, 1.0, jax.random.key(1))
+        b = apply_attack("random", trained, g, one, 1.0, jax.random.key(2))
+        c = apply_attack("random", trained, g, one, 1.0, jax.random.key(1))
+        np.testing.assert_array_equal(np.asarray(a["w"]), np.asarray(c["w"]))
+        assert np.abs(np.asarray(a["w"]) - np.asarray(b["w"])).max() > 1e-3
+
+    def test_corrupt_fleet_count_and_clear(self):
+        fleet = make_fleet(ScenarioConfig(preset="tiered-fleet", seed=1), 16)
+        for frac in (0.1, 0.25, 0.5):
+            bad = corrupt_fleet(fleet, frac, "sign-flip", scale=3.0, seed=0)
+            assert int(np.asarray(bad.corrupt).sum()) == math.ceil(frac * 16)
+            assert bad.attack == "sign-flip" and bad.attack_scale == 3.0
+        assert corrupt_fleet(fleet, 0.0).corrupt is None
+        with pytest.raises(KeyError, match="unknown attack"):
+            corrupt_fleet(fleet, 0.25, "nope")
+
+
+# ---------------------------------------------------------------------------
+# trimmed-mean kernel vs oracle
+# ---------------------------------------------------------------------------
+
+class TestTrimmedKernel:
+    def _check(self, x, w, trim):
+        x = jnp.asarray(x, jnp.float32)
+        w = jnp.asarray(w, jnp.float32)
+        ref = np.asarray(trimmed_agg_ref(x, w, trim))
+        ker = np.asarray(trimmed_agg(x, w, trim, interpret=True))
+        np.testing.assert_allclose(ker, ref, rtol=1e-6, atol=1e-6)
+        auto = np.asarray(kops.flat_trimmed_agg(x, w, trim))
+        np.testing.assert_allclose(auto, ref, rtol=1e-6, atol=1e-6)
+
+    def test_matches_oracle_random(self):
+        rng = np.random.default_rng(0)
+        for S, N, trim in ((6, 40, 1), (9, 130, 2), (16, 257, 4)):
+            x = rng.normal(size=(S, N))
+            w = rng.uniform(0.1, 1.0, S)
+            self._check(x, w / w.sum(), trim)
+
+    def test_matches_oracle_on_ties(self):
+        """Duplicate values: peel order must match the stable argsort."""
+        rng = np.random.default_rng(1)
+        x = rng.integers(-2, 3, size=(8, 96)).astype(np.float32)
+        w = rng.uniform(0.1, 1.0, 8)
+        for trim in (1, 2, 3):
+            self._check(x, w / w.sum(), trim)
+
+    def test_zero_surviving_weight_falls_back_to_kept_mean(self):
+        """All weight on trimmed rows -> unweighted mean of survivors."""
+        x = jnp.asarray([[0.0], [1.0], [2.0], [3.0], [4.0]], jnp.float32)
+        w = jnp.asarray([0.5, 0.0, 0.0, 0.0, 0.5])  # extremes only
+        out = np.asarray(trimmed_agg_ref(x, w, 1))
+        np.testing.assert_allclose(out, [2.0], rtol=1e-6)  # mean(1, 2, 3)
+        ker = np.asarray(trimmed_agg(x, w, 1, interpret=True))
+        np.testing.assert_allclose(ker, out, rtol=1e-6)
+
+    def test_trim_zero_is_weighted_mean(self):
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=(5, 33)).astype(np.float32)
+        w = rng.uniform(0.1, 1.0, 5).astype(np.float32)
+        w = w / w.sum()
+        out = np.asarray(kops.flat_trimmed_agg(jnp.asarray(x),
+                                               jnp.asarray(w), 0))
+        np.testing.assert_allclose(out, w @ x, rtol=1e-5, atol=1e-6)
+
+    def test_invalid_trim_raises(self):
+        x = jnp.zeros((4, 8))
+        w = jnp.full((4,), 0.25)
+        with pytest.raises(ValueError):
+            trimmed_agg_ref(x, w, 2)          # 2 * trim == S
+
+    @settings(max_examples=10)
+    @given(st.integers(0, 10_000), st.integers(5, 9), st.integers(1, 2),
+           st.integers(0, 2))
+    def test_breakdown_point_property(self, seed, S, trim, raw_bad):
+        """<= trim outliers per coordinate cannot drag the commit outside
+        the honest value range (the classical breakdown property)."""
+        if 2 * trim >= S:
+            trim = (S - 1) // 2
+        num_bad = min(raw_bad, trim)
+        x, honest = hostile_matrix(seed, S, 32, num_bad, outlier=1e4)
+        rng = np.random.default_rng(seed + 1)
+        w = rng.uniform(0.05, 1.0, S).astype(np.float32)
+        w = w / w.sum()
+        out = np.asarray(
+            kops.flat_trimmed_agg(jnp.asarray(x), jnp.asarray(w), trim)
+        )
+        lo = x[honest].min(axis=0) - 1e-5
+        hi = x[honest].max(axis=0) + 1e-5
+        assert np.all(out >= lo) and np.all(out <= hi)
+
+
+# ---------------------------------------------------------------------------
+# ClippedDPStrategy: norm bound + keyed determinism
+# ---------------------------------------------------------------------------
+
+class TestClippedDP:
+    def _state(self, strat, N=6, K=8):
+        return strat.init_state(jnp.zeros((N,), jnp.float32), K, 0)
+
+    def test_step_norm_bounded_under_scaling_attack(self):
+        """No matter how oversized the payload, the commit moves at most
+        ``clip_norm`` (noise off)."""
+        strat = ClippedDPStrategy(clip_norm=0.5, noise_multiplier=0.0)
+        state = self._state(strat)
+        rng = np.random.default_rng(0)
+        stacked = rng.normal(size=(4, 6)) * np.asarray([[1e3], [1.0], [5e2],
+                                                        [1.0]])
+        new, _ = strat.step(state, _toy_inputs(stacked), CFG3, False, None)
+        assert float(jnp.linalg.norm(new.params - state.params)) <= 0.5 + 1e-5
+
+    def test_small_updates_pass_unclipped(self):
+        """Deltas inside the clip ball reproduce the plain weighted mean."""
+        strat = ClippedDPStrategy(clip_norm=100.0, noise_multiplier=0.0)
+        state = self._state(strat)
+        rng = np.random.default_rng(1)
+        stacked = rng.normal(size=(4, 6)).astype(np.float32)
+        new, _ = strat.step(state, _toy_inputs(stacked), CFG3, False, None)
+        np.testing.assert_allclose(np.asarray(new.params),
+                                   stacked.mean(0), rtol=1e-5, atol=1e-6)
+
+    def test_noise_deterministic_per_seed_and_round(self):
+        rng = np.random.default_rng(2)
+        stacked = rng.normal(size=(4, 6)).astype(np.float32)
+
+        def commit(noise_seed, rnd):
+            strat = ClippedDPStrategy(clip_norm=1.0, noise_multiplier=0.5,
+                                      noise_seed=noise_seed)
+            state = self._state(strat)
+            new, _ = strat.step(state, _toy_inputs(stacked, rnd=rnd), CFG3,
+                                False, None)
+            return np.asarray(new.params)
+
+        np.testing.assert_array_equal(commit(0, 3), commit(0, 3))
+        assert np.abs(commit(0, 3) - commit(0, 4)).max() > 1e-6
+        assert np.abs(commit(0, 3) - commit(1, 3)).max() > 1e-6
+
+    def test_all_dropped_round_is_noop_even_with_noise(self):
+        strat = ClippedDPStrategy(clip_norm=1.0, noise_multiplier=1.0)
+        state = self._state(strat)
+        inp = _toy_inputs(np.ones((4, 6)),
+                          contrib=jnp.zeros((4,), jnp.float32))
+        new, _ = strat.step(state, inp, CFG3, False, None)
+        np.testing.assert_array_equal(np.asarray(new.params),
+                                      np.asarray(state.params))
+        assert int(new.commits) == 0
+
+    def test_requires_update_norm_criterion(self):
+        assert ClippedDPStrategy.requires == ("update_norm",)
+        fn = get_criterion("update_norm")
+        assert criterion_needs("update_norm") == ("update",)
+        # linear decay in the norm, streamed-sq-norm fast path
+        lo = fn(ClientContext(update_sq_norm=jnp.asarray(0.0)))
+        hi = fn(ClientContext(update_sq_norm=jnp.asarray(81.0)))
+        np.testing.assert_allclose(float(lo), 1.0, rtol=1e-6)
+        np.testing.assert_allclose(float(hi), 0.1, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# selection must not see the corrupt mask
+# ---------------------------------------------------------------------------
+
+class TestCorruptionBlindness:
+    @pytest.mark.parametrize("name", sorted(POLICIES))
+    def test_policy_ignores_corrupt_mask(self, name):
+        """Every policy draws the same cohort on a clean fleet and on the
+        same fleet with a corrupt mask: corruption metadata must never
+        leak into selection (the byzantine preset plants attackers in
+        the fastest tier — exactly what a latency-greedy policy would
+        learn to prefer)."""
+        K, S = 24, 8
+        fleet = make_fleet(ScenarioConfig(preset="tiered-fleet", seed=2), K)
+        bad = corrupt_fleet(fleet, 0.25, "sign-flip", scale=5.0, seed=3)
+        policy = POLICIES[name]()
+        kwargs = dict(
+            num_clients=K, n=S, rnd=jnp.asarray(4, jnp.int32),
+            last_sync=jnp.zeros((K,), jnp.int32),
+            time_key=jax.random.key(11),
+        )
+        for r in range(3):
+            key = jax.random.fold_in(jax.random.key(7), r)
+            clean = round_participation(policy, key, fleet=fleet, **kwargs)
+            dirty = round_participation(policy, key, fleet=bad, **kwargs)
+            np.testing.assert_array_equal(np.asarray(clean),
+                                          np.asarray(dirty))
+
+
+# ---------------------------------------------------------------------------
+# hostile preset invariants
+# ---------------------------------------------------------------------------
+
+class TestHostilePresets:
+    def test_byzantine_counts_and_promotion(self):
+        cfg = ScenarioConfig(preset="byzantine", seed=5, corrupt_frac=0.25,
+                             attack="sign-flip", attack_scale=4.0)
+        fleet = make_fleet(cfg, 16)
+        bad = np.asarray(fleet.corrupt) > 0
+        assert bad.sum() == math.ceil(0.25 * 16)
+        assert fleet.attack == "sign-flip" and fleet.attack_scale == 4.0
+        # attackers sit in the fastest tier with perfect availability
+        assert np.all(np.asarray(fleet.tier)[bad] == 0)
+        assert np.all(np.asarray(fleet.dropout_prob)[bad] == 0.0)
+        assert np.all(np.asarray(fleet.duty_cycle)[bad] == 1.0)
+
+    def test_churn_gates_participation(self):
+        fleet = make_fleet(ScenarioConfig(preset="churn", seed=6), 32)
+        arrive = np.asarray(fleet.arrive_round)
+        depart = np.asarray(fleet.depart_round)
+        assert np.all(depart > arrive)
+        sel = jnp.arange(32, dtype=jnp.int32)
+        late = arrive.max()
+        # before the last arrival, the not-yet-arrived client is gated off
+        mask0, _ = participation(fleet, sel, jnp.asarray(0, jnp.int32),
+                                 jax.random.key(0))
+        assert np.all(np.asarray(mask0)[arrive > 0] == 0.0)
+        # after every departure, the leavers are gone for good
+        leaver = int(np.argmin(depart))
+        mask_end, _ = participation(
+            fleet, sel, jnp.asarray(int(depart[leaver]), jnp.int32),
+            jax.random.key(1))
+        assert float(np.asarray(mask_end)[leaver]) == 0.0
+        del late
+
+    def test_diurnal_wave_starves_off_peak_rounds(self):
+        cfg = ScenarioConfig(preset="diurnal", seed=7, period=16)
+        fleet = make_fleet(cfg, 48)
+        amp = np.asarray(fleet.diurnal_amp)
+        assert np.all((amp >= 0.7) & (amp <= 0.95))
+        sel = jnp.arange(48, dtype=jnp.int32)
+        totals = []
+        for r in range(16):
+            mask, _ = participation(fleet, sel, jnp.asarray(r, jnp.int32),
+                                    jax.random.fold_in(jax.random.key(8), r))
+            totals.append(float(np.asarray(mask).sum()))
+        # the wave must actually modulate turnout across the period
+        assert min(totals) < 0.5 * max(totals)
+
+
+# ---------------------------------------------------------------------------
+# the headline separation
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def iid_data():
+    return iid_reshard(make_synth_femnist(num_clients=16, mean_samples=32,
+                                          seed=3), seed=7)
+
+
+@pytest.fixture(scope="module")
+def mlp_params():
+    return init_mlp_params(jax.random.key(0), hidden=48)
+
+
+def _attacked_best_acc(data, params, strategy, rounds=150, scale=4.0):
+    cfg = FedSimConfig(
+        fraction=1.0, batch_size=8, local_epochs=1, lr=0.2,
+        max_rounds=rounds, eval_every=25, strategy=strategy,
+        aggregation=AggregationConfig(priority=(2, 0, 1)),
+        scenario=ScenarioConfig(preset="tiered-fleet", seed=1),
+        flat_params=True,
+    )
+    sim = FederatedSimulation(data, params, mlp_loss, mlp_accuracy, cfg)
+    corrupt_sim(sim, 0.25, "sign-flip", scale=scale, seed=0)
+    res = sim.run(targets=(0.99,), device_fracs=(0.99,), verbose=False)
+    return max(float(m.global_acc) for m in res.metrics)
+
+
+class TestSeparation:
+    def test_trimmed_mean_survives_where_sync_collapses(self, iid_data,
+                                                        mlp_params):
+        """25% sign-flipping clients on ``tiered-fleet``: the trimmed mean
+        holds >= 0.7 best-accuracy; the plain weighted sync commit is
+        dragged against the honest direction and degrades far below."""
+        trimmed = _attacked_best_acc(iid_data, mlp_params,
+                                     TrimmedMeanStrategy(trim=4))
+        plain = _attacked_best_acc(iid_data, mlp_params, None)  # sync
+        assert trimmed >= 0.7, f"trimmed-mean best-acc {trimmed:.3f} < 0.7"
+        assert plain < 0.6, f"sync under attack unexpectedly at {plain:.3f}"
+        assert plain < trimmed
+
+
+# ---------------------------------------------------------------------------
+# full attack sweep (slow tier)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+class TestAttackSweep:
+    @pytest.mark.parametrize("attack", sorted(ATTACKS))
+    @pytest.mark.parametrize("name,kwargs", [
+        ("trimmed-mean", {"trim": 4}),
+        ("clipped-dp", {"clip_norm": 1.0}),
+    ])
+    def test_robust_strategies_stay_finite_and_learn(self, iid_data,
+                                                     mlp_params, attack,
+                                                     name, kwargs):
+        agg = AggregationConfig(priority=(2, 0, 1))
+        if name == "clipped-dp":
+            agg = AggregationConfig(
+                criteria=("Ds", "Ld", "Md", "update_norm"),
+                priority=(3, 2, 0, 1))
+        cfg = FedSimConfig(
+            fraction=1.0, batch_size=8, local_epochs=1, lr=0.2,
+            max_rounds=40, eval_every=10, strategy=make_strategy(name,
+                                                                 **kwargs),
+            aggregation=agg,
+            scenario=ScenarioConfig(preset="tiered-fleet", seed=1),
+            flat_params=True,
+        )
+        sim = FederatedSimulation(iid_data, mlp_params, mlp_loss,
+                                  mlp_accuracy, cfg)
+        corrupt_sim(sim, 0.25, attack, scale=4.0, seed=0)
+        res = sim.run(targets=(0.99,), device_fracs=(0.99,), verbose=False)
+        accs = [float(m.global_acc) for m in res.metrics]
+        assert all(np.isfinite(a) for a in accs)
+        assert max(accs) > 0.3     # still learning under every attack

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from _helpers import init_mlp_params, mlp_accuracy, mlp_loss
+from _propcheck import given, settings, st
 from repro.core import AggregationConfig, compute_weights, normalize_criteria
 from repro.data.synthetic import make_synth_femnist
 from repro.federated.scenarios import (
@@ -184,6 +185,54 @@ class TestCompletionTime:
         dt = jax.jit(lambda k: completion_time(fleet, jnp.arange(6), k))(
             jax.random.key(3))
         assert dt.shape == (6,)
+
+
+class TestCompletionTimeProperties:
+    """Property-style invariants of the virtual clock, over random presets,
+    seeds, and cohort sizes."""
+
+    @settings(max_examples=12)
+    @given(st.integers(0, 10_000), st.integers(2, 16), st.integers(0, 2))
+    def test_dt_strictly_positive(self, seed, n, preset_idx):
+        preset = sorted(PRESETS)[preset_idx % len(PRESETS)]
+        fleet = make_fleet(ScenarioConfig(preset=preset, seed=seed), 32)
+        dt = completion_time(fleet, jnp.arange(n), jax.random.key(seed))
+        a = np.asarray(dt)
+        assert np.isfinite(a).all() and (a > 0).all()
+
+    @settings(max_examples=12)
+    @given(st.integers(0, 10_000), st.integers(2, 16))
+    def test_monotone_in_slowdown(self, seed, n):
+        """Scaling every slowdown up can only increase every dt (same
+        jitter stream)."""
+        fleet = make_fleet(ScenarioConfig(preset="tiered-fleet", seed=seed),
+                           32)
+        slower = DeviceFleet(
+            tier=fleet.tier, slowdown=fleet.slowdown * 1.5,
+            dropout_prob=fleet.dropout_prob, duty_cycle=fleet.duty_cycle,
+            phase=fleet.phase,
+        )
+        sel = jnp.arange(n)
+        key = jax.random.key(seed)
+        dt = np.asarray(completion_time(fleet, sel, key))
+        dt_slow = np.asarray(completion_time(slower, sel, key))
+        assert (dt_slow >= dt).all()
+        np.testing.assert_allclose(dt_slow, 1.5 * dt, rtol=1e-6)
+
+    @settings(max_examples=12)
+    @given(st.integers(0, 10_000), st.integers(2, 16), st.integers(0, 2))
+    def test_sync_barrier_dominates_async_wave(self, seed, n, preset_idx):
+        """The sync straggler barrier ``max_k dt_k`` is never shorter than
+        a buffered-async wave of the same cohort, ``n / sum_k (1/dt_k)``
+        (harmonic-mean wave time): asynchrony can only help the clock."""
+        preset = sorted(PRESETS)[preset_idx % len(PRESETS)]
+        fleet = make_fleet(ScenarioConfig(preset=preset, seed=seed), 32)
+        dt = np.asarray(
+            completion_time(fleet, jnp.arange(n), jax.random.key(seed)),
+            dtype=np.float64)
+        barrier = dt.max()
+        wave = n / (1.0 / dt).sum()
+        assert barrier >= wave * (1.0 - 1e-6)
 
 
 class TestScenarioSimulation:

@@ -1,0 +1,90 @@
+"""Record golden trajectories for the engine regression tests.
+
+Usage::
+
+    PYTHONPATH=src python tools/record_goldens.py [--which async]
+
+Writes ``tests/golden/engine_async.json`` (and can re-record the sync
+golden with ``--which sync``, though that file is pinned from before the
+engine refactor and should normally never be regenerated).  Goldens are
+recorded on the CPU backend — the same backend tier-1 runs on — and the
+tests compare bit for bit, so regenerate only on a deliberate,
+understood trajectory change and say why in the commit message.
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tests"))
+
+import jax  # noqa: E402
+
+from _helpers import init_mlp_params, mlp_accuracy, mlp_loss  # noqa: E402
+from repro.core import AggregationConfig  # noqa: E402
+from repro.data.synthetic import make_synth_femnist  # noqa: E402
+from repro.federated import BufferedAsyncStrategy, ScenarioConfig  # noqa: E402
+from repro.federated.simulation import (  # noqa: E402
+    FederatedSimulation,
+    FedSimConfig,
+)
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tests", "golden")
+
+ASYNC_CONFIG = {
+    "num_clients": 16, "mean_samples": 24, "data_seed": 3,
+    "hidden": 48, "param_seed": 0,
+    "fraction": 0.25, "batch_size": 8, "local_epochs": 2, "lr": 0.1,
+    "max_rounds": 6, "eval_every": 2,
+    "criteria": ["staleness", "Ds", "Ld", "Md"],
+    "priority": [0, 1, 2, 3],
+    "buffer_size": 6,
+    "preset": "tiered-fleet", "scenario_seed": 1,
+}
+
+
+def record_async(path: str) -> None:
+    g = ASYNC_CONFIG
+    data = make_synth_femnist(num_clients=g["num_clients"],
+                              mean_samples=g["mean_samples"],
+                              seed=g["data_seed"])
+    params = init_mlp_params(jax.random.key(g["param_seed"]),
+                             hidden=g["hidden"])
+    cfg = FedSimConfig(
+        fraction=g["fraction"], batch_size=g["batch_size"],
+        local_epochs=g["local_epochs"], lr=g["lr"],
+        max_rounds=g["max_rounds"], eval_every=g["eval_every"],
+        aggregation=AggregationConfig(criteria=tuple(g["criteria"]),
+                                      priority=tuple(g["priority"])),
+        strategy=BufferedAsyncStrategy(buffer_size=g["buffer_size"]),
+        scenario=ScenarioConfig(preset=g["preset"],
+                                seed=g["scenario_seed"]),
+    )
+    sim = FederatedSimulation(data, params, mlp_loss, mlp_accuracy, cfg)
+    res = sim.run(targets=(0.99,), device_fracs=(0.99,), verbose=False)
+    golden = {
+        "config": g,
+        "rounds": [m.round for m in res.metrics],
+        "global_acc": [float(m.global_acc) for m in res.metrics],
+        "weights_entropy": [float(m.weights_entropy) for m in res.metrics],
+        "sim_time": [float(m.sim_time) for m in res.metrics],
+        "commits": int(res.final_state.commits),
+    }
+    with open(path, "w") as f:
+        json.dump(golden, f, indent=1)
+        f.write("\n")
+    print(f"wrote {path}: acc={golden['global_acc']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--which", default="async", choices=["async"])
+    args = ap.parse_args()
+    if args.which == "async":
+        record_async(os.path.join(GOLDEN_DIR, "engine_async.json"))
+
+
+if __name__ == "__main__":
+    main()
