@@ -1,6 +1,6 @@
 """Round-loop benchmark: dispatch/hotpath x strategies x selection policies.
 
-Five sections, all on synthetic workloads (see ``benchmarks/README.md``
+Six sections, all on synthetic workloads (see ``benchmarks/README.md``
 for the metric schema and sim-time units):
 
 * **Dispatch** — steady-state rounds/sec of the engine's two execution
@@ -40,6 +40,12 @@ for the metric schema and sim-time units):
   only on ``[S, N]``, and ``vmap(scan(grad(conv)))`` is pathologically
   slow on XLA CPU (see ``models/mlp.py``), so CNN-scale server numbers
   come from the MLP like every other engine benchmark.
+* **Scale** — the mesh-parallel server round block over fleet size x
+  shard count (K up to 10^6 clients, client axis forced onto 8 host
+  devices): rounds/sec plus the per-shard byte footprint of the O(K)
+  server state and the ``[S, N]`` wave block.  Each grid point runs in
+  a subprocess so ``XLA_FLAGS=--xla_force_host_platform_device_count``
+  can be set before jax imports (see :func:`bench_scale`).
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmark harness
 contract); :func:`main` also returns the results as a dict, which
@@ -55,6 +61,10 @@ sweep).
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -499,6 +509,167 @@ def bench_hotpath(smoke: bool = False) -> dict:
     }
 
 
+#: worker → parent handshake line prefix for the scale subprocesses
+SCALE_TAG = "SCALE_RESULT:"
+
+
+def _scale_worker(cfg: dict) -> dict:
+    """Run ONE ``scale`` configuration in this process.
+
+    Measures the *server* round block in isolation — the part whose cost
+    the client-axis sharding targets: synthetic ``[S_loc, N]`` wave
+    blocks are generated in-shard (the full ``[S, N]`` fleet matrix is
+    never materialized on any shard), criteria are measured with the
+    flat kernels, and :class:`~repro.federated.engine.SyncStrategy`
+    commits the round.  Local training is deliberately excluded: a real
+    ``FederatedSimulation`` at K >= 10^5 would spend the benchmark
+    budget on synthetic client SGD that says nothing about the sharded
+    hot path.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.federated.engine import RoundInputs, ServerState, SyncStrategy
+    from repro.kernels import collective as kcoll
+    from repro.launch.mesh import client_sharding, make_host_mesh
+    from repro.utils.sharding import shard_map_compat
+
+    K, S, N = cfg["K"], cfg["S"], cfg["N"]
+    rounds, repeats, shards = cfg["rounds"], cfg["repeats"], cfg["shards"]
+    if len(jax.devices()) < shards:
+        raise RuntimeError(
+            f"need {shards} devices, have {len(jax.devices())}; the parent "
+            "must set XLA_FLAGS=--xla_force_host_platform_device_count")
+
+    mesh = make_host_mesh() if shards > 1 else None
+    shard = client_sharding(mesh) if mesh is not None else None
+    n_sh = shard.num_shards if shard is not None else 1
+    s_loc = S // n_sh
+
+    strategy = SyncStrategy()
+    acfg = AggregationConfig(priority=(2, 0, 1))
+    params = jnp.zeros((N,), jnp.float32)
+    state = strategy.init_state(params, K, 0)
+    # replicated [K] dataset sizes (4 bytes/client — cheap even at 10^6)
+    counts = jnp.asarray(
+        np.random.default_rng(0).integers(8, 64, size=K), jnp.float32)
+    base_key = jax.random.key(0)
+    ones = jnp.ones((S,), jnp.float32)
+
+    def round_step(st, rnd):
+        key = jax.random.fold_in(base_key, rnd)
+        sel = jax.random.permutation(key, K)[:S].astype(jnp.int32)
+        # synthetic wave: this shard's [S_loc, N] block of client updates
+        sidx = shard.index() if shard is not None else 0
+        eps = jax.random.normal(jax.random.fold_in(key, 1 + sidx),
+                                (s_loc, N), jnp.float32)
+        wave = st.params[None, :] + 0.01 * eps
+        ls = (shard.all_gather(st.last_sync) if shard is not None
+              else st.last_sync)
+        stale = (rnd - ls[sel]).astype(jnp.float32)
+        upd_sq = (kcoll.flat_divergence_sq_shard(wave, st.params, shard)
+                  if shard is not None
+                  else kops.flat_divergence_sq(wave, st.params))
+        raw = jnp.stack([counts[sel],
+                         1.0 / (1.0 + stale),
+                         1.0 / (1.0 + jnp.sqrt(upd_sq))], axis=1)
+        crit = normalize_criteria(raw, ones)
+        inp = RoundInputs(rnd=rnd, sel=sel, stacked=wave, criteria=crit,
+                          mask=ones, contrib=ones, dt=ones, shard=shard)
+        st, _ = strategy.step(st, inp, acfg, False, eval_fn=None)
+        return st, None
+
+    def block(st, round_ids):
+        return jax.lax.scan(round_step, st, round_ids)
+
+    if shard is not None:
+        k_spec = shard.partition_spec()
+        state_spec = ServerState(
+            params=P(), quality=P(), priority_idx=P(), last_sync=k_spec,
+            sim_time=P(), commits=P(), buffer=P(), buffer_weight=P(),
+            buffer_count=P(), in_buffer=k_spec)
+        block = shard_map_compat(block, mesh, in_specs=(state_spec, P()),
+                                 out_specs=(state_spec, P()))
+
+    fn = jax.jit(block)
+    ids = jnp.arange(1, rounds + 1, dtype=jnp.int32)
+    st, _ = fn(state, ids)
+    jax.block_until_ready(st.params)          # compile + warmup block
+    best = 0.0
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        st, _ = fn(st, ids)
+        jax.block_until_ready(st.params)
+        best = max(best, rounds / (time.perf_counter() - t0))
+
+    state_bytes = int(sum(l.nbytes for l in jax.tree.leaves(state)))
+    sharded_bytes = int(state.last_sync.nbytes)   # [K] fields live split
+    return {
+        "K": K, "S": S, "num_params": N, "shards": n_sh, "rounds": rounds,
+        "rounds_per_sec": best,
+        "server_state_bytes_global": state_bytes,
+        "server_state_bytes_per_shard":
+            (state_bytes - sharded_bytes) + sharded_bytes // n_sh,
+        "wave_block_bytes_per_shard": s_loc * N * 4,
+        # sanity: every round commits with a unit barrier, so the virtual
+        # clock counts executed rounds exactly
+        "sim_time": float(st.sim_time),
+    }
+
+
+def bench_scale(smoke: bool = False) -> dict:
+    """Mesh-parallel server round block over K x shard-count (``scale``).
+
+    Every grid point runs in a fresh subprocess: the forced host device
+    count is baked into ``XLA_FLAGS`` *before* jax imports, so 1-shard
+    and 8-shard points can share one parent process.  Throughput numbers
+    on a forced-CPU mesh measure dispatch + collective overhead, not
+    parallel speedup (the "devices" share the host's cores); the
+    per-shard byte columns are the headline — they show the O(K) state
+    and the ``[S, N]`` wave splitting across the client axis.
+    """
+    if smoke:
+        grid = [dict(K=1_000, S=64, N=4_096, rounds=4, repeats=1, shards=sh)
+                for sh in (1, 8)]
+    else:
+        grid = []
+        for K in (1_000, 10_000, 100_000, 1_000_000):
+            S = 512 if K == 1_000 else 1024
+            rounds = 4 if K <= 10_000 else 2
+            for sh in (1, 8):
+                grid.append(dict(K=K, S=S, N=131_072, rounds=rounds,
+                                 repeats=1, shards=sh))
+    src = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    records = []
+    for cfg in grid:
+        env = dict(os.environ)
+        env.setdefault("JAX_PLATFORM_NAME", "cpu")
+        if cfg["shards"] > 1:
+            env["XLA_FLAGS"] = (
+                f"--xla_force_host_platform_device_count={cfg['shards']}")
+        else:
+            env.pop("XLA_FLAGS", None)
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in (src, env.get("PYTHONPATH")) if p)
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__),
+             "--scale-worker", json.dumps(cfg)],
+            env=env, capture_output=True, text=True, timeout=1800)
+        line = next((ln for ln in proc.stdout.splitlines()
+                     if ln.startswith(SCALE_TAG)), None)
+        if proc.returncode != 0 or line is None:
+            raise RuntimeError(
+                f"scale worker {cfg} failed (rc={proc.returncode}):\n"
+                f"{proc.stdout}\n{proc.stderr}")
+        records.append(json.loads(line[len(SCALE_TAG):]))
+    return {
+        "smoke": smoke,
+        "num_params": grid[0]["N"],
+        "strategy": "sync",
+        "sweep": records,
+    }
+
+
 def main(clients: int = 64, rounds: int = 64, block: int = 16,
          strat_clients: int = 32, strat_rounds: int = 200,
          target_acc: float = 0.75, smoke: bool = False) -> dict:
@@ -521,6 +692,7 @@ def main(clients: int = 64, rounds: int = 64, block: int = 16,
                                 target_acc, reuse=strat)
     robust = bench_robust(sdata, sparams, strat_rounds, 10, target_acc)
     hotpath = bench_hotpath(smoke=smoke)
+    scale = bench_scale(smoke=smoke)
 
     rows = [
         ("roundloop_host_us_per_round", 1e6 / rps_host,
@@ -581,6 +753,13 @@ def main(clients: int = 64, rounds: int = 64, block: int = 16,
                 f"hotpath_{phase}_flat_ms_{tag}", ph[f"{phase}_flat_ms"],
                 f"pytree {ph[f'{phase}_pytree_ms']:.1f} ms",
             ))
+    for rec in scale["sweep"]:
+        rows.append((
+            f"scale_K{rec['K']}_shards{rec['shards']}_us_per_round",
+            1e6 / rec["rounds_per_sec"],
+            f"S={rec['S']}, "
+            f"{rec['server_state_bytes_per_shard']} state bytes/shard",
+        ))
     for name, val, derived in rows:
         print(f"{name},{val:.2f},{derived}")
 
@@ -613,6 +792,7 @@ def main(clients: int = 64, rounds: int = 64, block: int = 16,
             **robust,
         },
         "hotpath": hotpath,
+        "scale": scale,
     }
 
 
@@ -620,4 +800,11 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale CI slice of every section")
-    main(smoke=ap.parse_args().smoke)
+    ap.add_argument("--scale-worker", metavar="JSON", default=None,
+                    help="internal: run one bench_scale grid point and "
+                         "print SCALE_RESULT:<json>")
+    args = ap.parse_args()
+    if args.scale_worker is not None:
+        print(SCALE_TAG + json.dumps(_scale_worker(json.loads(args.scale_worker))))
+    else:
+        main(smoke=args.smoke)

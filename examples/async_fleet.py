@@ -42,6 +42,8 @@ barrier's lower bound).
     PYTHONPATH=src python examples/async_fleet.py --preset tiered-fleet
     PYTHONPATH=src python examples/async_fleet.py --preset tiered-fleet \\
         --policy deadline
+    PYTHONPATH=src python examples/async_fleet.py --mesh   # shard the
+        # client axis over the local devices (flat server path)
 """
 from __future__ import annotations
 
@@ -76,6 +78,11 @@ def _config(name: str, args) -> FedSimConfig:
     common = dict(fraction=0.25, batch_size=10, local_epochs=1, lr=0.1,
                   max_rounds=args.rounds, eval_every=args.block,
                   scenario=scenario, selection=make_policy(args.policy))
+    if getattr(args, "mesh_obj", None) is not None:
+        # --mesh: every strategy in the sweep runs the same round block
+        # shard_map'd over the client axis (flat path required)
+        common.update(mesh=args.mesh_obj, flat_params=True,
+                      fraction=args.mesh_fraction)
     if name == "sync":
         return FedSimConfig(
             aggregation=AggregationConfig(priority=(2, 0, 1)), **common)
@@ -128,10 +135,30 @@ def main() -> None:
     ap.add_argument("--policy", default="uniform", choices=sorted(POLICIES),
                     help="client-selection policy (see "
                          "repro.federated.selection)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="run the flat server path mesh-parallel over the "
+                         "client axis (launch.mesh.make_host_mesh over the "
+                         "local devices; see docs/ARCHITECTURE.md)")
     ap.add_argument("--fleet-seed", type=int, default=0)
     ap.add_argument("--target", type=float, default=0.6)
     ap.add_argument("--out", default="checkpoints/async_fleet.json")
     args = ap.parse_args()
+
+    args.mesh_obj = None
+    if args.mesh:
+        from repro.launch.mesh import client_sharding, make_host_mesh
+
+        mesh = make_host_mesh()
+        n_sh = client_sharding(mesh).num_shards
+        if args.clients % n_sh:
+            ap.error(f"--mesh: --clients {args.clients} must be divisible "
+                     f"by the {n_sh} client shard(s) of the local mesh")
+        cohort = max(1, round(0.25 * args.clients))
+        cohort += (-cohort) % n_sh   # round size up to a shard multiple
+        args.mesh_obj = mesh
+        args.mesh_fraction = cohort / args.clients
+        print(f"[driver] mesh: {n_sh} client shard(s), "
+              f"cohort {cohort}/{args.clients}")
 
     data = make_synth_femnist(num_clients=args.clients, mean_samples=40,
                               seed=0)

@@ -109,6 +109,7 @@ def adjust_round_vectorized(
     prev_quality: jax.Array,
     eval_fn: EvalFn,
     mask: Optional[jax.Array] = None,
+    shard=None,
 ) -> AdjustResult:
     """Algorithm 1 as one XLA computation (all permutations evaluated).
 
@@ -129,6 +130,14 @@ def adjust_round_vectorized(
     pass over the round's models) instead of ``m!`` sequential pytree
     aggregations; same acceptance rule, float-tolerance-identical
     candidates.
+
+    With ``shard`` (a :class:`~repro.utils.sharding.ShardSpec`, flat
+    path only, inside ``shard_map``): ``c``/``mask`` are the full
+    replicated vectors while ``stacked_models`` is this shard's
+    ``[K_loc, N]`` wave block; the candidate sweep becomes the
+    shard-local ``[m!, K_loc] @ [K_loc, N]`` GEMM finished by one psum
+    (:func:`repro.kernels.collective.flat_candidate_sweep_shard`), and
+    evaluation/acceptance run replicated on identical candidates.
     """
     perms = operators.all_permutations(cfg.num_criteria())
     n = len(perms)
@@ -139,13 +148,25 @@ def adjust_round_vectorized(
     )
 
     flat = isinstance(stacked_models, jax.Array) and stacked_models.ndim == 2
+    if shard is not None and not flat:
+        raise ValueError(
+            "adjust_round_vectorized(shard=...) requires the flat [K, N] "
+            "client matrix (flat_params=True)"
+        )
     if flat:
         # Flat-vector hot path: all m! candidate aggregates as ONE
         # [n, K] @ [K, N] matmul — a single streaming pass over the
         # stacked client matrix instead of n sequential weighted sums.
-        cands = (weights.astype(jnp.float32)
-                 @ stacked_models.astype(jnp.float32)
-                 ).astype(stacked_models.dtype)          # [n, N]
+        if shard is not None:
+            from repro.kernels.collective import flat_candidate_sweep_shard
+
+            w_loc = shard.slice_rows(weights, axis=1)    # [n, K_loc]
+            cands = flat_candidate_sweep_shard(
+                w_loc, stacked_models, shard)            # [n, N]
+        else:
+            cands = (weights.astype(jnp.float32)
+                     @ stacked_models.astype(jnp.float32)
+                     ).astype(stacked_models.dtype)      # [n, N]
         qualities = jax.lax.map(eval_fn, cands)          # [n]
     else:
         def build_and_eval(w):

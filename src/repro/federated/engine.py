@@ -56,6 +56,18 @@ golden-pinned path) or the flat ``[N]`` vector of the hot path
 is the ``[S, N]`` client matrix, ``aggregate_models`` dispatches to one
 fused weighted reduction, and the async buffer fold is a single matvec —
 no strategy code changes between the two.
+
+Mesh parallelism: under ``FedSimConfig(mesh=...)`` the same strategies
+run inside a ``shard_map`` over the mesh's client axes.
+``RoundInputs.shard`` carries the static
+:class:`~repro.utils.sharding.ShardSpec`; ``stacked`` is then this
+shard's ``[S_loc, N]`` wave block and ``ServerState.last_sync`` /
+``in_buffer`` are ``[K_loc]`` client blocks, while every O(S) vector
+(criteria, weights, masks, dt) stays replicated.  Each strategy's
+reduction becomes a shard-local kernel finished by one collective
+(:mod:`repro.kernels.collective`); with ``shard=None`` (the default)
+every code path below is byte-for-byte the single-device one, which is
+what the bit-for-bit golden pins.
 """
 from __future__ import annotations
 
@@ -73,8 +85,10 @@ from repro.core import (
     compute_weights,
 )
 from repro.core.criteria import resolve
+from repro.kernels import collective as kcoll
 from repro.kernels import ops as kops
 from repro.utils.pytree import PyTree
+from repro.utils.sharding import ShardSpec
 
 # Candidate evaluation (Algorithm-1 lines 13-16): params -> scalar quality.
 EvalFn = Callable[[PyTree], jax.Array]
@@ -147,17 +161,52 @@ class RoundInputs:
     mask: jax.Array       # [S] binary participation
     contrib: jax.Array    # [S] mask / slowdown (straggler down-weighting)
     dt: jax.Array         # [S] virtual completion times (time units)
+    #: static sharding context under FedSimConfig(mesh=...): ``stacked``
+    #: is then the [S_loc, N] wave block of this shard while sel /
+    #: criteria / mask / contrib / dt remain the full replicated [S]
+    #: vectors, and ServerState's [K] fields are [K_loc] client blocks.
+    shard: Optional[ShardSpec] = None
 
 
 def _scatter_round(last_sync: jax.Array, sel: jax.Array, mask: jax.Array,
-                   rnd: jax.Array, gate: jax.Array) -> jax.Array:
-    """``last_sync[sel] = rnd`` where ``mask`` and ``gate`` hold."""
-    upd = jnp.where(gate * mask > 0, rnd, last_sync[sel])
-    return last_sync.at[sel].set(upd.astype(last_sync.dtype))
+                   rnd: jax.Array, gate: jax.Array,
+                   shard: Optional[ShardSpec] = None) -> jax.Array:
+    """``last_sync[sel] = rnd`` where ``mask`` and ``gate`` hold.
+
+    With ``shard``, ``last_sync`` is this shard's ``[K_loc]`` client
+    block while ``sel`` is the full replicated wave: each shard updates
+    only the entries it owns.  Non-owned indices clip into valid slots,
+    which can collide with owned ones, so the sharded form scatters
+    ``max(rnd, ...)`` with a ``-1`` sentinel instead of ``set`` —
+    equivalent because ``last_sync`` is monotone non-decreasing, and
+    deterministic where duplicate-index ``set`` is not.
+    """
+    if shard is None:
+        upd = jnp.where(gate * mask > 0, rnd, last_sync[sel])
+        return last_sync.at[sel].set(upd.astype(last_sync.dtype))
+    k_loc = last_sync.shape[0]
+    lo = shard.index() * k_loc
+    owned = (sel >= lo) & (sel < lo + k_loc)
+    idx = jnp.clip(sel - lo, 0, k_loc - 1)
+    val = jnp.where(owned & (gate * mask > 0), rnd, -1)
+    return last_sync.at[idx].max(val.astype(last_sync.dtype))
 
 
 def _entropy(p: jax.Array) -> jax.Array:
     return -jnp.sum(p * jnp.log(jnp.maximum(p, 1e-12)))
+
+
+def _weighted_agg(stacked: PyTree, p: jax.Array,
+                  shard: Optional[ShardSpec]) -> PyTree:
+    """``aggregate_models``, shard-aware on the flat path.
+
+    ``p`` is the full globally-normalized ``[S]`` weight vector; under a
+    shard the local kernel consumes this shard's row slice of it and one
+    psum finishes the reduction.
+    """
+    if shard is None:
+        return aggregate_models(stacked, p)
+    return kcoll.flat_weighted_agg_shard(stacked, shard.slice_rows(p), shard)
 
 
 class AggregationStrategy:
@@ -216,7 +265,7 @@ class SyncStrategy(AggregationStrategy):
         if online_adjust:
             res = adjust_round_vectorized(
                 c, inp.stacked, cfg, prio_idx, prev_q,
-                eval_fn=eval_fn, mask=contrib,
+                eval_fn=eval_fn, mask=contrib, shard=inp.shard,
             )
             new_params, p = res.global_params, res.weights
             new_q = res.quality
@@ -225,7 +274,7 @@ class SyncStrategy(AggregationStrategy):
             n_eval = jnp.asarray(res.num_evaluated, jnp.int32)
         else:
             p = compute_weights(c, cfg, tuple(cfg.priority), mask=contrib)
-            new_params = aggregate_models(inp.stacked, p)
+            new_params = _weighted_agg(inp.stacked, p, inp.shard)
             new_q, new_prio = prev_q, prio_idx
             backtracked = jnp.asarray(False)
             n_eval = jnp.asarray(1, jnp.int32)
@@ -248,7 +297,7 @@ class SyncStrategy(AggregationStrategy):
             quality=new_q,
             priority_idx=new_prio,
             last_sync=_scatter_round(state.last_sync, inp.sel, inp.mask,
-                                     inp.rnd, alive_f),
+                                     inp.rnd, alive_f, inp.shard),
             sim_time=state.sim_time + jnp.where(alive, barrier, 1.0),
             commits=state.commits + alive.astype(jnp.int32),
         )
@@ -279,7 +328,7 @@ class FedAvgStrategy(AggregationStrategy):
         ds = names.index("dataset_size")
         p = compute_weights(inp.criteria[:, ds:ds + 1], self._DS_CFG, (0,),
                             mask=inp.contrib)
-        new_params = aggregate_models(inp.stacked, p)
+        new_params = _weighted_agg(inp.stacked, p, inp.shard)
 
         alive = jnp.sum(inp.contrib) > 0
         new_params = jax.tree.map(
@@ -290,7 +339,8 @@ class FedAvgStrategy(AggregationStrategy):
             state,
             params=new_params,
             last_sync=_scatter_round(state.last_sync, inp.sel, inp.mask,
-                                     inp.rnd, alive.astype(jnp.float32)),
+                                     inp.rnd, alive.astype(jnp.float32),
+                                     inp.shard),
             sim_time=state.sim_time + jnp.where(alive, barrier, 1.0),
             commits=state.commits + alive.astype(jnp.int32),
         )
@@ -375,13 +425,34 @@ class BufferedAsyncStrategy(AggregationStrategy):
         delta = jax.tree.map(
             lambda w, g: w - g[None], inp.stacked, state.params
         )
-        buffer = jax.tree.map(
-            lambda b, d: b + jnp.tensordot(wave_w, d, axes=(0, 0)),
-            state.buffer, delta,
-        )
+        if inp.shard is None:
+            buffer = jax.tree.map(
+                lambda b, d: b + jnp.tensordot(wave_w, d, axes=(0, 0)),
+                state.buffer, delta,
+            )
+        else:
+            # cross-shard buffer fold: each shard folds its own wave rows
+            # (delta is the [S_loc, N] block), one psum merges the partial
+            # sums, and the replicated buffer absorbs the full wave — the
+            # commit below then needs no further collective.
+            wave_loc = inp.shard.slice_rows(wave_w)
+            buffer = state.buffer + inp.shard.psum(
+                jnp.tensordot(wave_loc, delta, axes=(0, 0))
+            )
         buffer_weight = state.buffer_weight + jnp.sum(wave_w)
         buffer_count = state.buffer_count + jnp.sum(inp.mask).astype(jnp.int32)
-        in_buffer = state.in_buffer.at[inp.sel].max(inp.mask)
+        if inp.shard is None:
+            in_buffer = state.in_buffer.at[inp.sel].max(inp.mask)
+        else:
+            # [K_loc] block: mark only owned arrivals; clipped non-owned
+            # indices write 0, which max() ignores.
+            k_loc = state.in_buffer.shape[0]
+            lo = inp.shard.index() * k_loc
+            owned = ((inp.sel >= lo) & (inp.sel < lo + k_loc))
+            idx = jnp.clip(inp.sel - lo, 0, k_loc - 1)
+            in_buffer = state.in_buffer.at[idx].max(
+                inp.mask * owned.astype(inp.mask.dtype)
+            )
 
         commit = buffer_count >= self.buffer_size
         scale = jnp.where(
@@ -467,7 +538,11 @@ class TrimmedMeanStrategy(AggregationStrategy):
             )
         p = compute_weights(inp.criteria, cfg, tuple(cfg.priority),
                             mask=inp.contrib)
-        if _is_flat(inp.stacked):
+        if inp.shard is not None:
+            new_params = kcoll.flat_trimmed_agg_shard(
+                inp.stacked, p, self.trim, inp.shard
+            )
+        elif _is_flat(inp.stacked):
             new_params = kops.flat_trimmed_agg(inp.stacked, p, self.trim)
         else:
             new_params = kops.tree_trimmed_agg(inp.stacked, p, self.trim)
@@ -481,7 +556,8 @@ class TrimmedMeanStrategy(AggregationStrategy):
             state,
             params=new_params,
             last_sync=_scatter_round(state.last_sync, inp.sel, inp.mask,
-                                     inp.rnd, alive.astype(jnp.float32)),
+                                     inp.rnd, alive.astype(jnp.float32),
+                                     inp.shard),
             sim_time=state.sim_time + jnp.where(alive, barrier, 1.0),
             commits=state.commits + alive.astype(jnp.int32),
         )
@@ -536,7 +612,11 @@ class ClippedDPStrategy(AggregationStrategy):
         params = state.params
         p = compute_weights(inp.criteria, cfg, tuple(cfg.priority),
                             mask=inp.contrib)
-        if _is_flat(inp.stacked):
+        if inp.shard is not None:
+            num_params = int(inp.stacked.shape[1])
+            sq = kcoll.flat_divergence_sq_shard(inp.stacked, params,
+                                                inp.shard)
+        elif _is_flat(inp.stacked):
             num_params = int(inp.stacked.shape[1])
             sq = kops.flat_divergence_sq(inp.stacked, params)
         else:
@@ -553,7 +633,12 @@ class ClippedDPStrategy(AggregationStrategy):
         )
         q = p * clip                     # combined coefficient on deltas
         q_sum = jnp.sum(q)
-        if _is_flat(inp.stacked):
+        if inp.shard is not None:
+            step_vec = kcoll.flat_weighted_agg_shard(
+                inp.stacked, inp.shard.slice_rows(q), inp.shard
+            ) - q_sum * params
+            new_params = params + step_vec
+        elif _is_flat(inp.stacked):
             step_vec = kops.flat_weighted_agg(inp.stacked, q) - q_sum * params
             new_params = params + step_vec
         else:
@@ -591,7 +676,8 @@ class ClippedDPStrategy(AggregationStrategy):
             state,
             params=new_params,
             last_sync=_scatter_round(state.last_sync, inp.sel, inp.mask,
-                                     inp.rnd, alive.astype(jnp.float32)),
+                                     inp.rnd, alive.astype(jnp.float32),
+                                     inp.shard),
             sim_time=state.sim_time + jnp.where(alive, barrier, 1.0),
             commits=state.commits + alive.astype(jnp.int32),
         )

@@ -8,6 +8,15 @@ The paper uses uniform sampling of a fixed fraction (10%).  Two samplers:
   selection (capability/availability-aware, a beyond-paper extension in
   line with the device-awareness theme) uses the Gumbel-top-k trick for
   without-replacement sampling.
+
+Mesh note: under ``FedSimConfig(mesh=...)`` the jax sampler runs
+*replicated* inside ``shard_map`` — every shard draws the identical
+``[S]`` selection from the same per-round key (selection is O(K)-vector
+work, kilobytes; only the selected clients' ``[S_loc, N]`` training
+blocks are sharded downstream).  Samplers must therefore derive
+randomness only from the keys they are handed, never from
+``lax.axis_index`` — a shard-dependent draw would desynchronize the
+replicated state.
 """
 from __future__ import annotations
 

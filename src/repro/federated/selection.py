@@ -94,6 +94,12 @@ class SelectionContext:
     * ``time_key``    the round's completion-time PRNG key — the same
                       stream the engine uses for ``completion_time``, so
                       an oracle policy can peek at the true ``dt``
+
+    Under ``FedSimConfig(mesh=...)`` policies run replicated on every
+    shard: ``last_sync`` (and ``avoid``) are the *all-gathered* full
+    ``[K]`` vectors, not this shard's block, so any registered policy
+    works on the mesh unchanged — as long as it draws randomness only
+    from ``key``/``time_key`` (see ``sampler.py``'s mesh note).
     """
 
     key: jax.Array

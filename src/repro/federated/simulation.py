@@ -48,6 +48,19 @@ Two server-side representations share that round body:
   dispatched through ``repro.kernels.ops`` (Pallas on TPU, BLAS on CPU).
   The ``hotpath`` section of ``BENCH_roundloop.json`` tracks the win.
 
+``FedSimConfig(mesh=...)`` shards the flat path over the mesh's client
+axes (``launch.mesh.client_axes``): the round block runs inside one
+``shard_map``, each shard trains only its ``[S_loc, N]`` block of the
+wave and owns a ``[K_loc]`` block of the staleness clocks / async
+arrival mask and a ``[K_loc, C]`` block of the label table, and every
+strategy finishes its reduction with one collective
+(``repro.kernels.collective``).  Selection, participation and criteria
+normalization are O(S)/O(K)-vector work and run *replicated* from the
+same PRNG keys, so the sharded trajectory matches the single-device
+flat path to matvec reduction order (rtol 1e-5, gated in
+``tests/test_flatpath.py``).  See ``docs/ARCHITECTURE.md`` for the
+full placement table.
+
 The engine is model-agnostic: it takes ``loss_fn(params, x, y)`` and
 ``acc_fn(params, x, y, mask)`` plus initial params.
 """
@@ -91,9 +104,12 @@ from repro.federated.selection import (
     SelectionPolicy,
     UniformPolicy,
 )
+from repro.kernels import collective as kcoll
 from repro.kernels import ops as kops
+from repro.launch.mesh import client_sharding
 from repro.optim.optimizers import sgd
 from repro.utils.pytree import FlatSpec, PyTree
+from repro.utils.sharding import ShardSpec, shard_map_compat
 
 
 @dataclass
@@ -119,6 +135,14 @@ class FedSimConfig:
     ``donate=True`` donates the :class:`ServerState` carry to each block
     dispatch, letting XLA reuse the params/buffer storage instead of
     copying it per call.
+
+    ``mesh`` (a ``jax.sharding.Mesh``, e.g. from
+    ``launch.mesh.make_host_mesh`` / ``make_production_mesh``) runs the
+    round block sharded over the mesh's client axes — requires
+    ``flat_params=True`` and ``use_scan=True``, and both the fleet size
+    ``K`` and the round size ``S`` must be divisible by the product of
+    the client-axis sizes.  ``mesh=None`` (default) is the plain
+    single-device program.
     """
 
     fraction: float = 0.1          # paper: 10% of clients per round
@@ -136,6 +160,7 @@ class FedSimConfig:
     selection: Optional[SelectionPolicy] = None     # None -> UniformPolicy()
     flat_params: bool = False      # flat [S, N] server hot path
     donate: bool = True            # donate the carry to block dispatches
+    mesh: Optional[object] = None  # jax Mesh: shard the flat path's client axis
 
 
 @dataclass
@@ -218,6 +243,29 @@ class FederatedSimulation:
         # flat-vector hot path: cached ravel/unravel plan for the model
         self._flat = bool(config.flat_params)
         self._fspec = FlatSpec(init_params)
+
+        # mesh-parallel flat path: static sharding context over the
+        # mesh's client axes (ShardSpec); None = plain single-device.
+        self._shard: Optional[ShardSpec] = None
+        if config.mesh is not None:
+            if not self._flat:
+                raise ValueError(
+                    "FedSimConfig(mesh=...) requires flat_params=True — the "
+                    "client axis only shards on the flat [S, N] hot path"
+                )
+            if not config.use_scan:
+                raise ValueError(
+                    "FedSimConfig(mesh=...) requires use_scan=True (the "
+                    "sharded round block is one shard_map'd lax.scan)"
+                )
+            self._shard = client_sharding(config.mesh)
+            n_shards = self._shard.num_shards
+            if data.num_clients % n_shards:
+                raise ValueError(
+                    f"fleet size K={data.num_clients} must be divisible by "
+                    f"the mesh's client-shard count {n_shards} "
+                    f"(axes {self._shard.axes} of shape {self._shard.sizes})"
+                )
         # Laziness: the expensive update context (an [S, params] pytree, or
         # its streamed [S] squared norm on the flat path) is only built
         # when a configured criterion declares it needs updates.  A
@@ -251,9 +299,14 @@ class FederatedSimulation:
         # Static per-client features: the [K, C] label-histogram table is
         # fixed by the dataset, so one exact integer-count table gathered
         # by `sel` replaces the per-round [S, max_n, C] one-hot reduction.
+        # Stored in the narrowest integer dtype that holds the largest
+        # count (usually uint8/uint16 — 4-16x smaller than f32 at fleet
+        # scale, where this table is the dominant O(K·C) resident) and
+        # cast to f32 only on the gathered [S, C] wave slice.
+        hist = np.stack([data.label_histogram(k)
+                         for k in range(data.num_clients)])
         self._label_table = jnp.asarray(
-            np.stack([data.label_histogram(k)
-                      for k in range(data.num_clients)]), jnp.float32)
+            hist, np.min_scalar_type(int(hist.max(initial=0))))
 
         max_t = self.t_images.shape[1]
         self._t_mask = (jnp.arange(max_t)[None, :]
@@ -261,6 +314,13 @@ class FederatedSimulation:
 
         # Fixed per-round shapes -> every jitted program compiles once.
         self._num_sel = num_selected(data.num_clients, config.fraction)
+        if self._shard is not None and self._num_sel % self._shard.num_shards:
+            raise ValueError(
+                f"round size S={self._num_sel} (fraction={config.fraction} "
+                f"of K={data.num_clients}) must be divisible by the mesh's "
+                f"client-shard count {self._shard.num_shards} — adjust "
+                f"fraction so each shard trains an equal wave block"
+            )
         self._fixed_steps = max(
             1, int(data.counts.max()) // config.batch_size
         ) * config.local_epochs
@@ -270,10 +330,15 @@ class FederatedSimulation:
         # externally-held buffers into the first carry, so donation never
         # invalidates caller arrays.
         donate = (0,) if config.donate else ()
-        self._round_step = self._build_round_step()
-        self._run_block = jax.jit(self._build_run_block(),
-                                  donate_argnums=donate)
-        self._run_one = jax.jit(self._round_step, donate_argnums=donate)
+        if self._shard is None:
+            self._round_step = self._build_round_step()
+            self._run_block = jax.jit(self._build_run_block(),
+                                      donate_argnums=donate)
+            self._run_one = jax.jit(self._round_step, donate_argnums=donate)
+        else:
+            self._round_step = self._run_one = None
+            self._run_block = jax.jit(self._build_run_block_mesh(),
+                                      donate_argnums=donate)
         self._eval_all = jax.jit(self._eval_params)
 
     # ------------------------------------------------------------------
@@ -303,6 +368,8 @@ class FederatedSimulation:
     def _measure_criteria(
         self, stacked: PyTree, sel: jax.Array, params: PyTree,
         mask: jax.Array, last_sync: jax.Array, rnd: jax.Array,
+        label_counts: jax.Array,
+        shard: Optional[ShardSpec] = None,
     ) -> jax.Array:
         """[S, m] criteria matrix, normalized over the round's participants.
 
@@ -319,11 +386,17 @@ class FederatedSimulation:
         (``kernels.flat_divergence_sq``) rather than an ``[S, params]``
         update pytree.  ``stacked``/``params`` are the flat ``[S, N]`` /
         ``[N]`` arrays when ``flat_params=True``, pytrees otherwise.
+
+        ``label_counts`` is the pre-gathered ``[S, C]`` f32 wave slice of
+        the label table (the caller owns the gather because under a mesh
+        it is a distributed owned-rows psum over the ``[K_loc, C]``
+        shards); ``last_sync`` is likewise the *full* ``[K]`` clock.
+        With ``shard``, ``stacked`` is the local ``[S_loc, N]`` block and
+        the streamed divergence is all-gathered back to ``[S]``.
         """
         names = self.cfg.aggregation.criteria
         fleet = self.fleet
         n_examples = self.counts[sel].astype(jnp.float32)
-        label_counts = self._label_table[sel]
         stale = (rnd - last_sync[sel]).astype(jnp.float32)
         if fleet is not None:
             flops = 1.0 / fleet.slowdown[sel]      # relative capability
@@ -334,7 +407,10 @@ class FederatedSimulation:
 
         updates = upd_sq = None
         if self._needs_update:
-            if self._flat:
+            if shard is not None:
+                upd_sq = kcoll.flat_divergence_sq_shard(stacked, params,
+                                                        shard)
+            elif self._flat:
                 upd_sq = kops.flat_divergence_sq(stacked, params)
             else:
                 updates = jax.tree.map(lambda s, p: s - p[None],
@@ -348,12 +424,22 @@ class FederatedSimulation:
         return normalize_criteria(raw, mask)
 
     # ------------------------------------------------------------------
-    def _build_round_step(self):
+    def _build_round_step(self, shard: Optional[ShardSpec] = None,
+                          label_table=None):
         """Pure round body ``(state, round_idx) -> (state, ys)``.
 
         Carry is a :class:`ServerState`; everything — sampling, batch
         plans, local SGD, criteria, scenario masks, and the strategy's
         aggregation policy — happens in one traced program.
+
+        With ``shard`` the body is traced *inside* a ``shard_map`` over
+        the mesh's client axes: selection/masks/criteria run replicated
+        (same keys on every shard → identical values), each shard trains
+        only its positional ``[S_loc, N]`` wave block, the carry's
+        ``[K]`` fields arrive as ``[K_loc]`` blocks, and ``label_table``
+        is the traced ``[K_loc, C]`` shard of the label table (it must
+        be a shard_map *argument*, not a captured constant, to actually
+        live sharded).
         """
         cfg = self.cfg
         fleet = self.fleet
@@ -429,27 +515,44 @@ class FederatedSimulation:
             # to the pre-engine loop (which never sampled completion times)
             k_time = jax.random.fold_in(key, 3)
 
+            # Under a mesh, every O(K)/O(S) *vector* below is computed
+            # replicated from the replicated keys — only the [S_loc, N]
+            # training block and the [K_loc] state blocks are per-shard.
+            last_sync = state.last_sync
             avoid = strategy.avoid_mask(state)
+            if shard is not None:
+                last_sync = shard.all_gather(last_sync)
+                if avoid is not None:
+                    avoid = shard.all_gather(avoid)
             sel, dt_policy = policy.select(SelectionContext(
                 key=k_sel, num_clients=self.data.num_clients, n=S, rnd=rnd,
-                last_sync=state.last_sync, fleet=fleet, avoid=avoid,
+                last_sync=last_sync, fleet=fleet, avoid=avoid,
                 time_key=k_time,
             ))
             plans = device_batch_plans(k_batch, self.counts[sel],
                                        self._fixed_steps, cfg.batch_size)
             # flat mode: local_train already emits the [S, N] matrix —
             # everything downstream (criteria, weighting, aggregation,
-            # the candidate sweep) streams over it
+            # the candidate sweep) streams over it.  Under a mesh each
+            # shard trains only its positional block of the wave, so the
+            # full [S, N] matrix never exists on one device.
+            if shard is not None:
+                sel_t = shard.slice_rows(sel)
+                plans_t = shard.slice_rows(plans)
+            else:
+                sel_t, plans_t = sel, plans
             if corrupt_on:
                 # dedicated stream (fold index 4) so hostile runs perturb
                 # no existing randomness; one key per (round, client)
                 atk_keys = jax.random.split(jax.random.fold_in(key, 4), S)
-                stacked = local_train(model_params, self.images[sel],
-                                      self.labels[sel], plans,
-                                      fleet.corrupt[sel], atk_keys)
+                if shard is not None:
+                    atk_keys = shard.slice_rows(atk_keys)
+                stacked = local_train(model_params, self.images[sel_t],
+                                      self.labels[sel_t], plans_t,
+                                      fleet.corrupt[sel_t], atk_keys)
             else:
-                stacked = local_train(model_params, self.images[sel],
-                                      self.labels[sel], plans)
+                stacked = local_train(model_params, self.images[sel_t],
+                                      self.labels[sel_t], plans_t)
 
             if fleet is not None:
                 mask, contrib = participation(fleet, sel, rnd, k_scen)
@@ -466,11 +569,27 @@ class FederatedSimulation:
                 mask = mask * elig
                 contrib = contrib * elig
 
+            # [S, C] label-count slice for the Ld criterion: a direct
+            # gather on one device, a distributed owned-rows psum over the
+            # [K_loc, C] table shards on a mesh.
+            table = label_table if label_table is not None \
+                else self._label_table
+            if shard is None:
+                label_counts = table[sel].astype(jnp.float32)
+            else:
+                k_loc = table.shape[0]
+                lo = shard.index() * k_loc
+                owned = (sel >= lo) & (sel < lo + k_loc)
+                rows = table[jnp.clip(sel - lo, 0, k_loc - 1)]
+                label_counts = shard.psum(
+                    jnp.where(owned[:, None], rows.astype(jnp.float32), 0.0)
+                )
+
             c = self._measure_criteria(stacked, sel, params, mask,
-                                       state.last_sync, rnd)
+                                       last_sync, rnd, label_counts, shard)
 
             inp = RoundInputs(rnd=rnd, sel=sel, stacked=stacked, criteria=c,
-                              mask=mask, contrib=contrib, dt=dt)
+                              mask=mask, contrib=contrib, dt=dt, shard=shard)
             state, ys = strategy.step(
                 state, inp, cfg.aggregation, cfg.online_adjust,
                 eval_fn=lambda cand: self._eval_params(cand)[1],
@@ -485,6 +604,47 @@ class FederatedSimulation:
 
         def run_block(state: ServerState, round_ids):
             state, ys = jax.lax.scan(self._round_step, state, round_ids)
+            accs, global_acc = self._eval_params(state.params)
+            return state, ys, accs, global_acc
+
+        return run_block
+
+    def _build_run_block_mesh(self):
+        """The mesh-parallel run block: one ``shard_map`` per scan block.
+
+        Placement: the carry's ``last_sync``/``in_buffer`` and the label
+        table are sharded over the client axes (``PartitionSpec`` on dim
+        0); params, buffer, scalars, the round ids and every dataset
+        array captured by the round body are replicated.  Eval runs
+        outside the ``shard_map`` on the replicated global params.
+        """
+        from jax.sharding import PartitionSpec as P
+
+        shard = self._shard
+        mesh = self.cfg.mesh
+        k_spec = shard.partition_spec()
+        # Spec pytree mirroring ServerState; leaf specs broadcast over
+        # whole subtrees (params may be any pytree) and buffer slots that
+        # are None for this strategy match the empty subtree.
+        state_spec = ServerState(
+            params=P(), quality=P(), priority_idx=P(),
+            last_sync=k_spec, sim_time=P(), commits=P(),
+            buffer=P(), buffer_weight=P(), buffer_count=P(),
+            in_buffer=k_spec,
+        )
+
+        def block(state, round_ids, table):
+            step = self._build_round_step(shard=shard, label_table=table)
+            return jax.lax.scan(step, state, round_ids)
+
+        sharded = shard_map_compat(
+            block, mesh,
+            in_specs=(state_spec, P(), k_spec),
+            out_specs=(state_spec, P()),
+        )
+
+        def run_block(state: ServerState, round_ids):
+            state, ys = sharded(state, round_ids, self._label_table)
             accs, global_acc = self._eval_params(state.params)
             return state, ys, accs, global_acc
 

@@ -2,29 +2,56 @@
 
 Defined as FUNCTIONS so importing this module never touches jax device
 state; ``dryrun.py`` sets ``XLA_FLAGS`` *before* calling these.
+
+The federated client axes of a mesh (everything except ``model``) are
+what :mod:`repro.federated.simulation` shards the flat server path
+over — see :func:`client_sharding` and ``FedSimConfig(mesh=...)``.
 """
 from __future__ import annotations
 
 import jax
+
+from repro.utils.sharding import ShardSpec
+
+
+def _mk_mesh(shape, axes):
+    """Version-tolerant ``jax.make_mesh``.
+
+    ``axis_types`` (and ``jax.sharding.AxisType``) only exist on newer
+    jax; the tier-1 pin (0.4.37) takes neither, so pass them only when
+    available.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(axis_type.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 (256 chips/pod) single-pod, or 2x16x16 (512 chips) multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _mk_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
-    """Tiny mesh over the real local devices (tests / examples)."""
+    """Tiny mesh over the real local devices (tests / examples).
+
+    Raises a clear ``ValueError`` when ``model`` does not divide the
+    local device count (``model > n`` used to silently produce a
+    ``data = 0`` axis and an opaque mesh error downstream).
+    """
     n = len(jax.devices())
-    data = n // model
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    if model < 1 or model > n or n % model:
+        raise ValueError(
+            f"make_host_mesh(model={model}): need 1 <= model <= {n} with "
+            f"model dividing the local device count ({n}); set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=<n> before importing "
+            f"jax to widen a CPU host."
+        )
+    return _mk_mesh((n // model, model), ("data", "model"))
 
 
 def client_axes(mesh) -> tuple:
@@ -37,3 +64,13 @@ def num_clients(mesh) -> int:
     for a in client_axes(mesh):
         n *= mesh.shape[a]
     return n
+
+
+def client_sharding(mesh) -> ShardSpec:
+    """:class:`ShardSpec` over ``mesh``'s client axes (major-to-minor)."""
+    axes = client_axes(mesh)
+    if not axes:
+        raise ValueError(
+            f"mesh {mesh.axis_names} has no client axes (only 'model')"
+        )
+    return ShardSpec(axes=axes, sizes=tuple(mesh.shape[a] for a in axes))

@@ -4,7 +4,7 @@ Two layers:
 
 * fast — the committed ``BENCH_roundloop.json`` carries every section
   the README documents (``dispatch``/``strategies``/``selection``/
-  ``robust``/``hotpath``) with well-formed per-run records, and
+  ``robust``/``hotpath``/``scale``) with well-formed per-run records, and
   ``benchmarks/README.md`` documents each one.  This is the contract
   PRs diff trajectory numbers against: a section silently dropped from
   the harness shows up here, not three PRs later.
@@ -24,7 +24,8 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH = os.path.join(ROOT, "BENCH_roundloop.json")
 README = os.path.join(ROOT, "benchmarks", "README.md")
 
-SECTIONS = ("dispatch", "strategies", "selection", "robust", "hotpath")
+SECTIONS = ("dispatch", "strategies", "selection", "robust", "hotpath",
+            "scale")
 
 #: fields every _run_to_target-style record carries
 RUN_FIELDS = ("rounds_run", "final_acc", "best_acc", "commits",
@@ -87,6 +88,29 @@ class TestCommittedSchema:
         assert h["block"]["flat_speedup"] > 0
         assert h["workload"]["num_params"] > 1_000_000
 
+    def test_scale_sweep_records(self, bench):
+        sc = bench["scale"]
+        assert sc["sweep"], "scale sweep is empty"
+        for rec in sc["sweep"]:
+            assert rec["rounds_per_sec"] > 0
+            assert rec["server_state_bytes_per_shard"] <= \
+                rec["server_state_bytes_global"]
+            assert rec["wave_block_bytes_per_shard"] * rec["shards"] == \
+                rec["S"] * rec["num_params"] * 4
+            # every round commits under the synthetic full-participation
+            # wave, so the virtual clock counts executed rounds exactly
+            assert rec["sim_time"] > 0
+
+    def test_scale_covers_acceptance_point(self, bench):
+        # the sharding PR's acceptance workload: K = 10^5, S = 1024 on
+        # the 8-way forced-CPU client mesh, fleet up to 10^6
+        sweep = bench["scale"]["sweep"]
+        assert any(r["K"] == 100_000 and r["S"] == 1024 and r["shards"] == 8
+                   for r in sweep)
+        assert max(r["K"] for r in sweep) == 1_000_000
+        for K in {r["K"] for r in sweep}:
+            assert {r["shards"] for r in sweep if r["K"] == K} == {1, 8}
+
     def test_readme_documents_every_section(self):
         with open(README) as f:
             text = f.read()
@@ -113,3 +137,5 @@ class TestSmokeHarness:
         for preset in smoke["robust"]["presets"]:
             for sname in smoke["robust"]["strategies"]:
                 _check_run_record(smoke["robust"][f"{preset}/{sname}"])
+        # the smoke scale slice still exercises both shard counts
+        assert {r["shards"] for r in smoke["scale"]["sweep"]} == {1, 8}

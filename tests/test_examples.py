@@ -72,6 +72,22 @@ class TestFleetExamples:
             assert name in report, f"strategy {name!r} not swept"
             assert 0.0 <= report[name]["best_acc"] <= 1.0
 
+    def test_async_fleet_mesh_flag(self, tmp_path, monkeypatch):
+        # --mesh runs the whole strategy sweep through the shard_map'd
+        # flat path on the local device mesh (1 shard under tier-1 CPU;
+        # the multi-shard equivalence gate lives in test_flatpath.py)
+        from repro.federated import STRATEGIES
+
+        out = tmp_path / "async_fleet_mesh.json"
+        _run_main("async_fleet",
+                  ["--clients", "8", "--rounds", "2", "--hidden", "16",
+                   "--block", "2", "--buffer", "2", "--mesh",
+                   "--out", str(out)], monkeypatch)
+        report = json.loads(out.read_text())
+        for name in STRATEGIES:
+            assert name in report, f"strategy {name!r} not swept"
+            assert 0.0 <= report[name]["best_acc"] <= 1.0
+
 
 class TestLightMains:
     def test_quickstart_runs(self, monkeypatch, capsys):

@@ -18,6 +18,8 @@ tolerance everywhere:
 """
 import json
 import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -335,3 +337,106 @@ def test_donated_carry_survives_repeated_runs(small_data, mlp_params):
     # a donated-away buffer would raise RuntimeError
     for leaf in jax.tree.leaves(mlp_params):
         assert np.isfinite(np.asarray(leaf)).all()
+
+
+# ----------------------------------------------------------------------
+# Mesh equivalence gate: the sharded flat path vs the single-device flat
+# path, on a forced 8-host-device CPU mesh.  Runs in a subprocess because
+# XLA_FLAGS must be set before jax imports; one process sweeps every
+# {sync, buffered-async, trimmed-mean} x {uniform, tiered-fleet,
+# byzantine} combo and reports per-combo trajectories.
+# ----------------------------------------------------------------------
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_MESH_GATE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORM_NAME", "cpu")
+import json
+import jax, numpy as np
+from repro.core import AggregationConfig
+from repro.data.synthetic import make_synth_femnist
+from repro.federated import ScenarioConfig, make_strategy
+from repro.federated.simulation import FederatedSimulation, FedSimConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models.mlp import init_mlp_params, mlp_accuracy, mlp_loss
+
+data = make_synth_femnist(num_clients=16, mean_samples=12, seed=3)
+params = init_mlp_params(jax.random.key(0), hidden=16)
+
+def cfg_for(mode, preset, mesh):
+    kw = {}
+    if mode == "buffered-async":
+        kw["strategy"] = make_strategy("buffered-async", buffer_size=6)
+        kw["aggregation"] = AggregationConfig(
+            criteria=("staleness", "Ds", "Ld", "Md"), priority=(0, 1, 2, 3))
+    elif mode == "trimmed-mean":
+        kw["strategy"] = make_strategy("trimmed-mean", trim=1)
+    return FedSimConfig(
+        fraction=0.5, batch_size=8, local_epochs=1, lr=0.1,
+        max_rounds=4, eval_every=2, flat_params=True,
+        scenario=ScenarioConfig(preset=preset, seed=1), mesh=mesh, **kw)
+
+assert len(jax.devices()) == 8
+results = {}
+for preset in ("uniform", "tiered-fleet", "byzantine"):
+    for mode in ("sync", "buffered-async", "trimmed-mean"):
+        runs = []
+        for mesh in (None, make_host_mesh()):
+            sim = FederatedSimulation(data, params, mlp_loss, mlp_accuracy,
+                                      cfg_for(mode, preset, mesh))
+            res = sim.run(targets=(0.99,), device_fracs=(0.99,),
+                          verbose=False)
+            fp = np.concatenate([np.ravel(x)
+                                 for x in jax.tree.leaves(res.final_params)])
+            runs.append((res, fp))
+        (ra, fa), (rb, fb) = runs
+        results[f"{preset}/{mode}"] = {
+            "acc": [m.global_acc for m in ra.metrics],
+            "acc_mesh": [m.global_acc for m in rb.metrics],
+            "entropy": [m.weights_entropy for m in ra.metrics],
+            "entropy_mesh": [m.weights_entropy for m in rb.metrics],
+            "sim_time": [m.sim_time for m in ra.metrics],
+            "sim_time_mesh": [m.sim_time for m in rb.metrics],
+            "params_allclose": bool(np.allclose(fb, fa, rtol=1e-4,
+                                                atol=1e-5)),
+            "params_max_abs": float(np.max(np.abs(fb - fa))),
+        }
+print("RESULTS:" + json.dumps(results))
+"""
+
+
+class TestMeshGate:
+    """Forced 8-host-device CPU mesh: the sharded flat path must match
+    the single-device flat path for every strategy x preset combo."""
+
+    @pytest.fixture(scope="class")
+    def gate_results(self):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(_REPO, "src")
+        env.pop("XLA_FLAGS", None)
+        proc = subprocess.run(
+            [sys.executable, "-c", _MESH_GATE_SCRIPT], env=env,
+            capture_output=True, text=True, timeout=1200,
+        )
+        assert proc.returncode == 0, proc.stderr[-4000:]
+        for line in proc.stdout.splitlines():
+            if line.startswith("RESULTS:"):
+                return json.loads(line[len("RESULTS:"):])
+        raise AssertionError(f"no RESULTS line in: {proc.stdout[-2000:]}")
+
+    @pytest.mark.parametrize("preset",
+                             ["uniform", "tiered-fleet", "byzantine"])
+    @pytest.mark.parametrize("mode",
+                             ["sync", "buffered-async", "trimmed-mean"])
+    def test_sharded_matches_single_device(self, gate_results, preset, mode):
+        rec = gate_results[f"{preset}/{mode}"]
+        np.testing.assert_allclose(rec["acc_mesh"], rec["acc"],
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(rec["entropy_mesh"], rec["entropy"],
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(rec["sim_time_mesh"], rec["sim_time"],
+                                   rtol=1e-5, atol=1e-6)
+        assert rec["params_allclose"], (
+            f"final params diverged (max abs {rec['params_max_abs']:.2e})"
+        )

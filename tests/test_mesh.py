@@ -1,0 +1,200 @@
+"""Mesh-parallel flat path: wiring, validation and state-memory tests.
+
+Fast-tier coverage for ``FedSimConfig(mesh=...)``:
+
+* ``make_host_mesh`` construction + the ``model > devices`` regression
+  (used to yield a silent ``data = 0`` axis),
+* config validation (mesh requires the flat path; K and S must divide
+  the client-shard count),
+* a 1-device host mesh runs the *sharded* program (shard_map, psum,
+  owned-rows scatters, wave slicing all trace and execute) and matches
+  the plain flat path — the true multi-device equivalence gate is the
+  forced-8-device subprocess test in ``tests/test_flatpath.py``,
+* O(K) server-state memory pins at K = 10^5 (satellite of the sharding
+  PR: the staleness clocks stay int32 and the label table stays in the
+  narrowest sufficient integer dtype).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AggregationConfig
+from repro.data.synthetic import NUM_CLASSES, make_synth_femnist
+from repro.federated import (
+    BufferedAsyncStrategy,
+    ScenarioConfig,
+    SyncStrategy,
+    make_strategy,
+)
+from repro.federated.simulation import FederatedSimulation, FedSimConfig
+from repro.launch.mesh import client_axes, client_sharding, make_host_mesh
+from repro.models.mlp import init_mlp_params, mlp_accuracy, mlp_loss
+from repro.utils.sharding import ShardSpec
+
+
+class TestHostMesh:
+    def test_host_mesh_builds_on_local_devices(self):
+        mesh = make_host_mesh()
+        n = len(jax.devices())
+        assert mesh.shape["data"] == n and mesh.shape["model"] == 1
+        assert client_axes(mesh) == ("data",)
+        spec = client_sharding(mesh)
+        assert spec.axes == ("data",) and spec.num_shards == n
+
+    def test_model_larger_than_device_count_raises(self):
+        # regression: model > len(jax.devices()) used to produce a
+        # data = 0 axis and an opaque mesh error downstream
+        n = len(jax.devices())
+        with pytest.raises(ValueError, match="make_host_mesh"):
+            make_host_mesh(model=n + 1)
+
+    def test_non_divisible_model_raises(self):
+        with pytest.raises(ValueError, match="dividing"):
+            make_host_mesh(model=max(2, len(jax.devices()) * 3))
+
+    def test_invalid_model_zero_raises(self):
+        with pytest.raises(ValueError, match="make_host_mesh"):
+            make_host_mesh(model=0)
+
+
+class _FakeMesh:
+    """Duck-typed stand-in so divisibility validation (which only reads
+    ``axis_names``/``shape``) can be exercised without 8 real devices."""
+
+    axis_names = ("data", "model")
+    shape = {"data": 8, "model": 1}
+
+
+class TestConfigValidation:
+    def _sim(self, cfg, num_clients=16):
+        data = make_synth_femnist(num_clients=num_clients, mean_samples=8,
+                                  seed=0)
+        params = init_mlp_params(jax.random.key(0), hidden=8)
+        return FederatedSimulation(data, params, mlp_loss, mlp_accuracy, cfg)
+
+    def test_mesh_requires_flat_params(self):
+        with pytest.raises(ValueError, match="flat_params"):
+            self._sim(FedSimConfig(mesh=make_host_mesh(), flat_params=False))
+
+    def test_mesh_requires_use_scan(self):
+        with pytest.raises(ValueError, match="use_scan"):
+            self._sim(FedSimConfig(mesh=make_host_mesh(), flat_params=True,
+                                   use_scan=False))
+
+    def test_fleet_size_must_divide_shard_count(self):
+        with pytest.raises(ValueError, match="fleet size"):
+            self._sim(FedSimConfig(mesh=_FakeMesh(), flat_params=True),
+                      num_clients=12)
+
+    def test_round_size_must_divide_shard_count(self):
+        # K = 16 divides 8 shards but S = ceil(0.25 * 16) = 4 does not
+        with pytest.raises(ValueError, match="round size"):
+            self._sim(FedSimConfig(mesh=_FakeMesh(), flat_params=True,
+                                   fraction=0.25), num_clients=16)
+
+
+class TestOneDeviceMeshEquivalence:
+    """The sharded program with one shard must reproduce the plain flat
+    path (the 8-shard gate lives in test_flatpath.py)."""
+
+    @pytest.fixture(scope="class")
+    def data(self):
+        return make_synth_femnist(num_clients=16, mean_samples=12, seed=3)
+
+    @pytest.fixture(scope="class")
+    def params(self):
+        return init_mlp_params(jax.random.key(0), hidden=16)
+
+    def _run(self, data, params, mesh, **kw):
+        cfg = FedSimConfig(
+            fraction=0.5, batch_size=8, local_epochs=1, lr=0.1,
+            max_rounds=2, eval_every=2, flat_params=True,
+            scenario=ScenarioConfig(preset="tiered-fleet", seed=1),
+            mesh=mesh, **kw,
+        )
+        sim = FederatedSimulation(data, params, mlp_loss, mlp_accuracy, cfg)
+        res = sim.run(targets=(0.99,), device_fracs=(0.99,), verbose=False)
+        flat = np.concatenate(
+            [np.ravel(x) for x in jax.tree.leaves(res.final_params)]
+        )
+        return res, flat
+
+    @pytest.mark.parametrize("kw", [
+        {},
+        {"online_adjust": True},
+        {"strategy": BufferedAsyncStrategy(buffer_size=6),
+         "aggregation": AggregationConfig(
+             criteria=("staleness", "Ds", "Ld", "Md"),
+             priority=(0, 1, 2, 3))},
+        {"strategy": make_strategy("trimmed-mean", trim=1)},
+    ], ids=["sync", "adjust", "async", "trimmed"])
+    def test_one_shard_matches_plain_flat(self, data, params, kw):
+        res_a, flat_a = self._run(data, params, None, **kw)
+        res_b, flat_b = self._run(data, params, make_host_mesh(), **kw)
+        for ma, mb in zip(res_a.metrics, res_b.metrics):
+            np.testing.assert_allclose(mb.global_acc, ma.global_acc,
+                                       rtol=1e-5, atol=1e-6)
+            np.testing.assert_allclose(mb.sim_time, ma.sim_time,
+                                       rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(flat_b, flat_a, rtol=1e-4, atol=1e-5)
+
+
+class TestServerStateMemory:
+    """Satellite: O(K) server state must stay narrow at fleet scale."""
+
+    K = 100_000
+
+    def test_server_state_bytes_at_100k_clients(self):
+        params = jnp.zeros((1024,), jnp.float32)
+        st = SyncStrategy().init_state(params, self.K, 0)
+        assert st.last_sync.dtype == jnp.int32
+        # sync carry: the only O(K) field is the staleness clock
+        per_client = sum(
+            leaf.nbytes for leaf in jax.tree.leaves(st)
+            if leaf.ndim >= 1 and leaf.shape[0] == self.K
+        )
+        assert per_client == 4 * self.K
+
+        st_async = BufferedAsyncStrategy(buffer_size=8).init_state(
+            params, self.K, 0
+        )
+        per_client = sum(
+            leaf.nbytes for leaf in jax.tree.leaves(st_async)
+            if leaf.ndim >= 1 and leaf.shape[0] == self.K
+        )
+        # + [K] f32 in-flight arrival mask
+        assert per_client == 8 * self.K
+
+    def test_label_table_narrow_integer_dtype(self):
+        data = make_synth_femnist(num_clients=16, mean_samples=12, seed=3)
+        params = init_mlp_params(jax.random.key(0), hidden=8)
+        sim = FederatedSimulation(
+            data, params, mlp_loss, mlp_accuracy, FedSimConfig()
+        )
+        table = sim._label_table
+        assert jnp.issubdtype(table.dtype, jnp.integer)
+        assert table.dtype.itemsize <= 2, (
+            f"[K, C] label table should be uint8/uint16 at these counts, "
+            f"got {table.dtype}"
+        )
+        # exact counts survive the narrowing
+        expect = np.stack([data.label_histogram(k)
+                           for k in range(data.num_clients)])
+        np.testing.assert_array_equal(np.asarray(table), expect)
+        # the pin the satellite asks for: [K, C] bytes at K = 10^5 is
+        # K * C * itemsize — 4-16x under the old f32 table
+        assert self.K * NUM_CLASSES * table.dtype.itemsize \
+            <= self.K * NUM_CLASSES * 2
+
+
+class TestShardSpec:
+    def test_index_and_slice_math_static(self):
+        spec = ShardSpec(axes=("pod", "data"), sizes=(2, 4))
+        assert spec.num_shards == 8
+        ps = spec.partition_spec()
+        assert ps[0] == ("pod", "data")
+
+    def test_single_axis_partition_spec(self):
+        spec = ShardSpec(axes=("data",), sizes=(8,))
+        assert spec.partition_spec()[0] == "data"
