@@ -1,6 +1,6 @@
 """Round-loop benchmark: dispatch/hotpath x strategies x selection policies.
 
-Six sections, all on synthetic workloads (see ``benchmarks/README.md``
+Seven sections, all on synthetic workloads (see ``benchmarks/README.md``
 for the metric schema and sim-time units):
 
 * **Dispatch** — steady-state rounds/sec of the engine's two execution
@@ -31,6 +31,13 @@ for the metric schema and sim-time units):
   trimmed mean holds its accuracy under the byzantine preset while
   plain sync tracks the poisoned mean; churn/diurnal rows price the
   robustness tax when the fleet is unstable but honest.
+* **Bytes** — the compression frontier: the same sync workload per
+  preset under ``compress in {none, int8, int4}`` (blockwise-absmax
+  quantized client uploads + per-client error feedback through the flat
+  path).  Each run pairs its accuracy/virtual-time trajectory with the
+  per-upload wire bytes and cumulative uplink bytes to target; the
+  ``paper_cnn`` block restates the analytic per-upload reduction
+  (~4x int8 / ~8x int4) at the paper CNN's 6.6M-param scale.
 * **Hotpath** — the flat-vector server path vs the default pytree path
   at the paper CNN's parameter scale (6.6M params, S=32): end-to-end
   round-block throughput, the carry-donation dispatch delta, and
@@ -258,6 +265,79 @@ def bench_robust(data, params, rounds: int, block: int,
             cfg = _robust_cfg(sname, preset, rounds, block, cohort)
             out[f"{preset}/{sname}"] = _run_to_target(data, params, cfg,
                                                       target_acc)
+    return out
+
+
+#: the compression sweep grid — uncompressed flat path vs both codecs
+COMPRESS_SWEEP = ("none", "int8", "int4")
+BYTES_PRESETS = ("uniform", "tiered-fleet")
+
+
+def _bytes_cfg(preset: str, mode: str, rounds: int,
+               block: int) -> FedSimConfig:
+    return FedSimConfig(
+        fraction=0.25, batch_size=10, local_epochs=1, lr=0.1,
+        max_rounds=rounds, eval_every=block,
+        aggregation=AggregationConfig(priority=(2, 0, 1)),
+        scenario=ScenarioConfig(preset=preset, seed=0),
+        flat_params=True, compress=mode,
+    )
+
+
+def bench_bytes(data, params, rounds: int, block: int,
+                target_acc: float = 0.75) -> dict:
+    """Accuracy / sim-time vs wire bytes: the compression frontier.
+
+    Every preset x ``{none, int8, int4}`` combination runs the same sync
+    workload through the flat server path — ``none`` is the uncompressed
+    baseline, the codecs quantize each client upload blockwise (absmax
+    scale per ``quant_block`` coords) with per-client error feedback.
+    Each record carries the per-upload wire bytes (packed payload + f32
+    scale sidecar) and the cumulative uplink bytes until the accuracy
+    target, so the frontier reads directly: how much accuracy / virtual
+    time does each 4x/8x wire reduction cost?  The ``paper_cnn`` block
+    restates the per-upload arithmetic at the paper CNN's 6.6M-param
+    scale — the reduction ratio is analytic (it depends only on N and
+    the block size), so it needs no CNN-scale simulation.
+    """
+    from repro.kernels import quantize as kquant
+
+    n = tree_count_params(params)
+    clients = data.images.shape[0]
+    S = max(1, round(0.25 * clients))
+    out = {
+        "presets": list(BYTES_PRESETS),
+        "modes": list(COMPRESS_SWEEP),
+        "quant_block": kquant.QBLOCK,
+        "num_params": n,
+        "cohort": S,
+        "target_acc": target_acc,
+        "clients": clients,
+        "max_rounds": rounds,
+    }
+    for preset in BYTES_PRESETS:
+        for mode in COMPRESS_SWEEP:
+            cfg = _bytes_cfg(preset, mode, rounds, block)
+            rec = _run_to_target(data, params, cfg, target_acc)
+            wb = kquant.wire_bytes(n, mode)
+            rec["compress"] = mode
+            rec["wire_bytes_per_upload"] = wb
+            rec["bytes_reduction"] = 4 * n / wb
+            rec["uplink_bytes_to_target"] = (
+                rec["rounds_to_target"] * S * wb
+                if rec["rounds_to_target"] is not None else None)
+            out[f"{preset}/{mode}"] = rec
+
+    paper_params = init_mlp_params(jax.random.key(0),
+                                   hidden=CNN_SCALE_HIDDEN)
+    paper_n = tree_count_params(paper_params)
+    out["paper_cnn"] = {"num_params": paper_n}
+    for mode in COMPRESS_SWEEP:
+        wb = kquant.wire_bytes(paper_n, mode)
+        out["paper_cnn"][mode] = {
+            "wire_bytes_per_upload": wb,
+            "bytes_reduction": 4 * paper_n / wb,
+        }
     return out
 
 
@@ -691,6 +771,7 @@ def main(clients: int = 64, rounds: int = 64, block: int = 16,
     selection = bench_selection(sdata, sparams, strat_rounds, 10,
                                 target_acc, reuse=strat)
     robust = bench_robust(sdata, sparams, strat_rounds, 10, target_acc)
+    bytes_sec = bench_bytes(sdata, sparams, strat_rounds, 10, target_acc)
     hotpath = bench_hotpath(smoke=smoke)
     scale = bench_scale(smoke=smoke)
 
@@ -727,6 +808,21 @@ def main(clients: int = 64, rounds: int = 64, block: int = 16,
         rows.append((
             f"roundloop_robust_{preset}_{sname}_best_acc", s["best_acc"],
             f"final={s['final_acc']:.3f} after {s['rounds_run']} rounds",
+        ))
+    for preset in BYTES_PRESETS:
+        for mode in COMPRESS_SWEEP:
+            b = bytes_sec[f"{preset}/{mode}"]
+            rows.append((
+                f"bytes_{preset}_{mode}_best_acc", b["best_acc"],
+                f"{b['bytes_reduction']:.2f}x wire reduction, "
+                f"{b['wire_bytes_per_upload']} B/upload",
+            ))
+    for mode in ("int8", "int4"):
+        p = bytes_sec["paper_cnn"][mode]
+        rows.append((
+            f"bytes_paper_cnn_{mode}_reduction", p["bytes_reduction"],
+            f"{p['wire_bytes_per_upload']} B/upload at "
+            f"{bytes_sec['paper_cnn']['num_params']} params",
         ))
     hb, hw = hotpath["block"], hotpath["workload"]
     rows.append((
@@ -791,6 +887,7 @@ def main(clients: int = 64, rounds: int = 64, block: int = 16,
             "clients": strat_clients, "max_rounds": strat_rounds,
             **robust,
         },
+        "bytes": bytes_sec,
         "hotpath": hotpath,
         "scale": scale,
     }

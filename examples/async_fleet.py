@@ -44,6 +44,8 @@ barrier's lower bound).
         --policy deadline
     PYTHONPATH=src python examples/async_fleet.py --mesh   # shard the
         # client axis over the local devices (flat server path)
+    PYTHONPATH=src python examples/async_fleet.py --compress int8
+        # quantized client uploads + error feedback (flat server path)
 """
 from __future__ import annotations
 
@@ -83,6 +85,10 @@ def _config(name: str, args) -> FedSimConfig:
         # shard_map'd over the client axis (flat path required)
         common.update(mesh=args.mesh_obj, flat_params=True,
                       fraction=args.mesh_fraction)
+    if args.compress != "none":
+        # --compress: clients upload blockwise-absmax int8/int4 updates
+        # with per-client error feedback (flat path required)
+        common.update(compress=args.compress, flat_params=True)
     if name == "sync":
         return FedSimConfig(
             aggregation=AggregationConfig(priority=(2, 0, 1)), **common)
@@ -139,6 +145,11 @@ def main() -> None:
                     help="run the flat server path mesh-parallel over the "
                          "client axis (launch.mesh.make_host_mesh over the "
                          "local devices; see docs/ARCHITECTURE.md)")
+    ap.add_argument("--compress", default="none",
+                    choices=("none", "int8", "int4"),
+                    help="quantize client uploads (blockwise absmax, "
+                         "per-client error feedback; implies the flat "
+                         "server path)")
     ap.add_argument("--fleet-seed", type=int, default=0)
     ap.add_argument("--target", type=float, default=0.6)
     ap.add_argument("--out", default="checkpoints/async_fleet.json")
@@ -163,6 +174,14 @@ def main() -> None:
     data = make_synth_femnist(num_clients=args.clients, mean_samples=40,
                               seed=0)
     params = init_mlp_params(jax.random.key(0), hidden=args.hidden)
+
+    if args.compress != "none":
+        from repro.kernels.quantize import wire_bytes
+
+        n = sum(leaf.size for leaf in jax.tree.leaves(params))
+        wb = wire_bytes(n, args.compress)
+        print(f"[driver] compress={args.compress}: {wb} wire bytes per "
+              f"upload vs {4 * n} uncompressed ({4 * n / wb:.2f}x)")
 
     report = {}
     for name in sorted(STRATEGIES):

@@ -31,6 +31,7 @@ from repro.launch.sharding_rules import param_shardings
 from repro.models import sharding as msharding
 from repro.models.registry import bundle as make_bundle
 from repro.utils.pytree import tree_count_params
+from repro.utils.sharding import mesh_context
 
 
 def main() -> None:
@@ -79,7 +80,7 @@ def main() -> None:
         }
 
     msharding.configure(True, mesh_axes=mesh.axis_names, manual_axes=("data",))
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         if args.adjust:
             step_fn = jax.jit(make_federated_adjust_step(mdl, mesh, lr=args.lr))
         else:

@@ -68,6 +68,16 @@ reduction becomes a shard-local kernel finished by one collective
 (:mod:`repro.kernels.collective`); with ``shard=None`` (the default)
 every code path below is byte-for-byte the single-device one, which is
 what the bit-for-bit golden pins.
+
+Compressed streaming: under ``FedSimConfig(compress="int8"|"int4")`` the
+round body hands strategies a quantized wave (``RoundInputs.quant``)
+alongside the dequantized reconstruction in ``stacked``.  Linear commits
+(sync, fedavg, the async buffer fold) consume the int8 tiles through the
+fused dequantize-reduce kernel (:func:`_quant_agg`); the nonlinear
+defenses (trimmed mean, clipped-DP) and the Algorithm-1 candidate sweep
+dequantize first — they read ``stacked`` unchanged.  The per-client
+error-feedback residuals live in ``ServerState.error_fb`` and are
+maintained by the simulation round body, not by strategies.
 """
 from __future__ import annotations
 
@@ -117,6 +127,14 @@ class ServerState:
     Buffer fields are ``None`` for strategies that never buffer (sync,
     fedavg); ``None`` children are empty pytree subtrees, so the same
     carry structure threads through ``lax.scan`` for every strategy.
+
+    ``error_fb`` is the compressed-streaming error-feedback carry
+    (``FedSimConfig(compress=..., error_feedback=True)``): ``[K, N]``
+    f32 — or this shard's ``[K_loc, N]`` client block under a mesh —
+    holding each client's quantization residual, re-injected into its
+    next participating upload by the simulation round body (strategies
+    never touch it; ``replace``-based steps carry it through).  ``None``
+    on uncompressed runs, keeping the golden-pinned carry structure.
     """
 
     params: PyTree
@@ -129,12 +147,13 @@ class ServerState:
     buffer_weight: Optional[jax.Array] = None  # sum of buffered scores (f32)
     buffer_count: Optional[jax.Array] = None   # buffered arrivals (i32)
     in_buffer: Optional[jax.Array] = None      # [K] 0/1 pending-arrival mask
+    error_fb: Optional[jax.Array] = None       # [K, N] quantization residuals
 
     def tree_flatten(self):
         children = (self.params, self.quality, self.priority_idx,
                     self.last_sync, self.sim_time, self.commits,
                     self.buffer, self.buffer_weight, self.buffer_count,
-                    self.in_buffer)
+                    self.in_buffer, self.error_fb)
         return children, None
 
     @classmethod
@@ -166,6 +185,18 @@ class RoundInputs:
     #: criteria / mask / contrib / dt remain the full replicated [S]
     #: vectors, and ServerState's [K] fields are [K_loc] client blocks.
     shard: Optional[ShardSpec] = None
+    #: compressed wave (``FedSimConfig(compress=...)``): the round's
+    #: quantized ``(q int8 [S, N], scales f32 [S, nb])`` pair — this
+    #: shard's row blocks under a mesh.  When set, ``stacked`` is the
+    #: *dequantized reconstruction* ``w_G + deq(q)``: linear commits
+    #: (sync/fedavg/async) consume ``quant`` through the fused
+    #: dequantize-reduce kernel instead, while the nonlinear defenses
+    #: (trimmed mean, clipped-DP) and Algorithm-1 sweep consume the
+    #: dequantized ``stacked`` — the server dequantizes *before* those
+    #: defenses, so a hostile payload cannot hide behind its scales.
+    quant: Optional[Tuple[jax.Array, jax.Array]] = None
+    #: static scale-block size of ``quant`` (0 when uncompressed)
+    qblock: int = 0
 
 
 def _scatter_round(last_sync: jax.Array, sel: jax.Array, mask: jax.Array,
@@ -207,6 +238,37 @@ def _weighted_agg(stacked: PyTree, p: jax.Array,
     if shard is None:
         return aggregate_models(stacked, p)
     return kcoll.flat_weighted_agg_shard(stacked, shard.slice_rows(p), shard)
+
+
+def _quant_agg(quant: Tuple[jax.Array, jax.Array], p: jax.Array,
+               qblock: int, shard: Optional[ShardSpec]) -> jax.Array:
+    """``Σ_k p_k · deq(q_k)`` — the fused dequantize-reduce commit.
+
+    ``p`` is the full ``[S]`` weight vector; under a shard the local
+    kernel consumes this shard's row slice and one psum over the
+    dequantized f32 partials finishes (``kernels.collective``).
+    """
+    q, scales = quant
+    if shard is None:
+        return kops.flat_qagg(q, scales, p, block=qblock)
+    return kcoll.flat_qagg_shard(q, scales, shard.slice_rows(p),
+                                 qblock, shard)
+
+
+def _model_agg(state_params: jax.Array, inp: "RoundInputs",
+               p: jax.Array) -> PyTree:
+    """``Σ_k p_k · w_k`` — fused over the quantized wave when present.
+
+    With ``inp.quant``, ``w_k = w_G + deq(q_k)`` by construction, so the
+    model aggregate is ``(Σ_k p_k) · w_G + Σ_k p_k · deq(q_k)`` — the
+    second term is one :func:`_quant_agg` pass over int8 tiles, and the
+    dequantized ``[S, N]`` reconstruction never enters the reduction.
+    Without it, this is exactly :func:`_weighted_agg`.
+    """
+    if inp.quant is None:
+        return _weighted_agg(inp.stacked, p, inp.shard)
+    return (jnp.sum(p) * state_params
+            + _quant_agg(inp.quant, p, inp.qblock, inp.shard))
 
 
 class AggregationStrategy:
@@ -274,7 +336,7 @@ class SyncStrategy(AggregationStrategy):
             n_eval = jnp.asarray(res.num_evaluated, jnp.int32)
         else:
             p = compute_weights(c, cfg, tuple(cfg.priority), mask=contrib)
-            new_params = _weighted_agg(inp.stacked, p, inp.shard)
+            new_params = _model_agg(params, inp, p)
             new_q, new_prio = prev_q, prio_idx
             backtracked = jnp.asarray(False)
             n_eval = jnp.asarray(1, jnp.int32)
@@ -328,7 +390,7 @@ class FedAvgStrategy(AggregationStrategy):
         ds = names.index("dataset_size")
         p = compute_weights(inp.criteria[:, ds:ds + 1], self._DS_CFG, (0,),
                             mask=inp.contrib)
-        new_params = _weighted_agg(inp.stacked, p, inp.shard)
+        new_params = _model_agg(state.params, inp, p)
 
         alive = jnp.sum(inp.contrib) > 0
         new_params = jax.tree.map(
@@ -422,10 +484,17 @@ class BufferedAsyncStrategy(AggregationStrategy):
         s = compute_scores(inp.criteria, cfg, tuple(cfg.priority)) * inp.contrib
         p_wave = s / jnp.maximum(jnp.sum(s), 1e-12)
         wave_w = p_wave * n_part
-        delta = jax.tree.map(
-            lambda w, g: w - g[None], inp.stacked, state.params
-        )
-        if inp.shard is None:
+        if inp.quant is not None:
+            # compressed wave: the buffered deltas *are* the dequantized
+            # uploads (stacked = w_G + deq(q)), so the wave fold is one
+            # fused dequantize-reduce over the int8 tiles — shard-local
+            # with a psum over the dequantized f32 partials under a mesh.
+            buffer = state.buffer + _quant_agg(inp.quant, wave_w,
+                                               inp.qblock, inp.shard)
+        elif inp.shard is None:
+            delta = jax.tree.map(
+                lambda w, g: w - g[None], inp.stacked, state.params
+            )
             buffer = jax.tree.map(
                 lambda b, d: b + jnp.tensordot(wave_w, d, axes=(0, 0)),
                 state.buffer, delta,
@@ -435,6 +504,9 @@ class BufferedAsyncStrategy(AggregationStrategy):
             # (delta is the [S_loc, N] block), one psum merges the partial
             # sums, and the replicated buffer absorbs the full wave — the
             # commit below then needs no further collective.
+            delta = jax.tree.map(
+                lambda w, g: w - g[None], inp.stacked, state.params
+            )
             wave_loc = inp.shard.slice_rows(wave_w)
             buffer = state.buffer + inp.shard.psum(
                 jnp.tensordot(wave_loc, delta, axes=(0, 0))

@@ -66,7 +66,7 @@ The engine is model-agnostic: it takes ``loss_fn(params, x, y)`` and
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -106,6 +106,7 @@ from repro.federated.selection import (
 )
 from repro.kernels import collective as kcoll
 from repro.kernels import ops as kops
+from repro.kernels import quantize as kquant
 from repro.launch.mesh import client_sharding
 from repro.optim.optimizers import sgd
 from repro.utils.pytree import FlatSpec, PyTree
@@ -143,6 +144,19 @@ class FedSimConfig:
     ``K`` and the round size ``S`` must be divisible by the product of
     the client-axis sizes.  ``mesh=None`` (default) is the plain
     single-device program.
+
+    ``compress`` turns on compressed update streaming (flat path only):
+    each client's flat update is quantized to int8/int4 with per-block
+    absmax scales (``kernels.quantize``, block size ``quant_block`` —
+    the kernel streaming tile) *inside* the vmapped ``local_train``
+    boundary, and linear commits consume the quantized wave through the
+    fused dequantize-reduce kernel.  ``error_feedback=True`` carries
+    per-client quantization residuals (``ServerState.error_fb``,
+    ``[K, N]`` f32 — a ``[K_loc, N]`` client block under a mesh) that
+    are re-injected into each client's next participating upload — the
+    standard EF trick that stops quantization bias accumulating across
+    rounds.  ``compress="none"`` (default) traces the exact golden
+    program: no quantization code enters the round step.
     """
 
     fraction: float = 0.1          # paper: 10% of clients per round
@@ -161,6 +175,9 @@ class FedSimConfig:
     flat_params: bool = False      # flat [S, N] server hot path
     donate: bool = True            # donate the carry to block dispatches
     mesh: Optional[object] = None  # jax Mesh: shard the flat path's client axis
+    compress: str = "none"         # "none" | "int8" | "int4" update streaming
+    error_feedback: bool = True    # carry per-client EF residuals (compressed)
+    quant_block: int = kquant.QBLOCK  # absmax scale granularity (kernel tile)
 
 
 @dataclass
@@ -243,6 +260,31 @@ class FederatedSimulation:
         # flat-vector hot path: cached ravel/unravel plan for the model
         self._flat = bool(config.flat_params)
         self._fspec = FlatSpec(init_params)
+
+        # compressed update streaming: static mode ("int8"/"int4" or None)
+        # plus whether the error-feedback residual carry is live.  With
+        # compress="none" nothing below traces — the golden program is
+        # untouched.
+        if config.compress not in ("none", *kquant.QMAX):
+            raise ValueError(
+                f"FedSimConfig.compress={config.compress!r}: expected "
+                f"'none' or one of {sorted(kquant.QMAX)}"
+            )
+        self._compress: Optional[str] = (
+            None if config.compress == "none" else config.compress
+        )
+        if self._compress is not None and not self._flat:
+            raise ValueError(
+                "FedSimConfig(compress=...) requires flat_params=True — "
+                "updates quantize as one flat vector per client on the "
+                "[S, N] hot path"
+            )
+        if config.quant_block < 1:
+            raise ValueError(
+                f"FedSimConfig.quant_block must be >= 1, got "
+                f"{config.quant_block}"
+            )
+        self._ef_on = self._compress is not None and config.error_feedback
 
         # mesh-parallel flat path: static sharding context over the
         # mesh's client axes (ShardSpec); None = plain single-device.
@@ -346,9 +388,14 @@ class FederatedSimulation:
         """Fresh engine carry for the current ``self.params`` (flat-path
         runs carry the raveled ``[N]`` vector)."""
         params = self._fspec.ravel(self.params) if self._flat else self.params
-        return self.strategy.init_state(
+        state = self.strategy.init_state(
             params, self.data.num_clients, self._prio_init
         )
+        if self._ef_on:
+            state = replace(state, error_fb=jnp.zeros(
+                (self.data.num_clients, self._fspec.num_params), jnp.float32
+            ))
+        return state
 
     # ------------------------------------------------------------------
     def _eval_global(self, params):
@@ -493,7 +540,30 @@ class FederatedSimulation:
         if one_client is None:
             one_client = _one_client_honest
 
-        if flat:
+        compress = self._compress
+        qblock = cfg.quant_block
+        ef_on = self._ef_on
+        n_flat = fspec.num_params
+
+        if flat and compress is not None:
+            # Compressed streaming: quantize inside the vmapped client,
+            # so local_train's direct output is the int8 wave + its
+            # per-block scale sidecar + the client's new error-feedback
+            # residual — the uncompressed f32 [S, N] update matrix is
+            # never a local_train output.  ``ef_row`` is the residual
+            # re-injected into this upload (zeros when EF is off).
+            def one_client_quant(global_params, g_flat, ef_row, *rest):
+                w = fspec.ravel(one_client(global_params, *rest))
+                carried = (w - g_flat) + ef_row
+                q_row, s_row = kquant.quantize_blockwise(
+                    carried, compress, qblock)
+                resid = carried - kquant.dequantize_blockwise(
+                    q_row, s_row, qblock)
+                return q_row, s_row, resid
+
+            local_train = jax.vmap(one_client_quant,
+                                   in_axes=(None, None, 0) + train_axes[1:])
+        elif flat:
             # ravel inside the vmapped client so the [S, N] matrix is
             # local_train's direct output — the stacked pytree never
             # materializes as a separate buffer (an extra S*N-sized copy
@@ -541,18 +611,47 @@ class FederatedSimulation:
                 plans_t = shard.slice_rows(plans)
             else:
                 sel_t, plans_t = sel, plans
+            train_args = (self.images[sel_t], self.labels[sel_t], plans_t)
             if corrupt_on:
                 # dedicated stream (fold index 4) so hostile runs perturb
                 # no existing randomness; one key per (round, client)
                 atk_keys = jax.random.split(jax.random.fold_in(key, 4), S)
                 if shard is not None:
                     atk_keys = shard.slice_rows(atk_keys)
-                stacked = local_train(model_params, self.images[sel_t],
-                                      self.labels[sel_t], plans_t,
-                                      fleet.corrupt[sel_t], atk_keys)
+                train_args = train_args + (fleet.corrupt[sel_t], atk_keys)
+            if compress is not None:
+                # Error-feedback rows for this wave: a direct [S, N]
+                # gather on one device.  Under a mesh each row lives on
+                # its *owner* shard while the wave position that trains
+                # it may sit on another, so an owned-rows psum rebuilds
+                # the wave's rows replicated (the label-table pattern at
+                # [S, N] cost — a simulation artifact: on a real fleet
+                # the residual lives on the device, not the server) and
+                # each shard slices its positional block.
+                ef_wave = None
+                if not ef_on:
+                    s_rows = S if shard is None else S // shard.num_shards
+                    ef_sel = jnp.zeros((s_rows, n_flat), jnp.float32)
+                elif shard is None:
+                    ef_sel = state.error_fb[sel]
+                else:
+                    k_loc = state.error_fb.shape[0]
+                    lo = shard.index() * k_loc
+                    owned_ef = (sel >= lo) & (sel < lo + k_loc)
+                    rows = state.error_fb[jnp.clip(sel - lo, 0, k_loc - 1)]
+                    ef_wave = shard.psum(
+                        jnp.where(owned_ef[:, None], rows, 0.0))
+                    ef_sel = shard.slice_rows(ef_wave)
+                q_wave, q_scales, resid = local_train(
+                    model_params, params, ef_sel, *train_args)
+                # the dequantized reconstruction w_G + deq(q) — what the
+                # server actually "received"; criteria and the nonlinear
+                # strategies consume this, linear commits use the int8
+                # wave through the fused kernel instead.
+                stacked = params[None, :] + kquant.dequantize_blockwise(
+                    q_wave, q_scales, qblock)
             else:
-                stacked = local_train(model_params, self.images[sel_t],
-                                      self.labels[sel_t], plans_t)
+                stacked = local_train(model_params, *train_args)
 
             if fleet is not None:
                 mask, contrib = participation(fleet, sel, rnd, k_scen)
@@ -568,6 +667,33 @@ class FederatedSimulation:
                 elig = 1.0 - avoid[sel]
                 mask = mask * elig
                 contrib = contrib * elig
+
+            if ef_on:
+                # Fold this wave's residuals into the carry: participants
+                # (mask > 0) replace their row, everyone else keeps
+                # theirs — a dropped upload never reached the server, so
+                # its quantization error is not yet the server's debt and
+                # re-injects on the client's next surviving round.
+                if shard is None:
+                    dr = jnp.where(mask[:, None] > 0, resid - ef_sel, 0.0)
+                    new_ef = state.error_fb.at[sel].add(dr)
+                else:
+                    # owner-side scatter: residual rows were computed on
+                    # the shard that trained them; all_gather restores
+                    # wave order and each shard folds only rows it owns.
+                    # Non-owned indices clip into valid slots but add
+                    # exact zeros, so clip collisions are harmless and
+                    # the update stays deterministic (cf. _scatter_round,
+                    # which needs a max/sentinel for the same reason).
+                    r_full = shard.all_gather(resid)
+                    k_loc = state.error_fb.shape[0]
+                    lo = shard.index() * k_loc
+                    owned_ef = (sel >= lo) & (sel < lo + k_loc)
+                    idx = jnp.clip(sel - lo, 0, k_loc - 1)
+                    dr = jnp.where((owned_ef & (mask > 0))[:, None],
+                                   r_full - ef_wave, 0.0)
+                    new_ef = state.error_fb.at[idx].add(dr)
+                state = replace(state, error_fb=new_ef)
 
             # [S, C] label-count slice for the Ld criterion: a direct
             # gather on one device, a distributed owned-rows psum over the
@@ -589,7 +715,10 @@ class FederatedSimulation:
                                        last_sync, rnd, label_counts, shard)
 
             inp = RoundInputs(rnd=rnd, sel=sel, stacked=stacked, criteria=c,
-                              mask=mask, contrib=contrib, dt=dt, shard=shard)
+                              mask=mask, contrib=contrib, dt=dt, shard=shard,
+                              quant=((q_wave, q_scales)
+                                     if compress is not None else None),
+                              qblock=qblock if compress is not None else 0)
             state, ys = strategy.step(
                 state, inp, cfg.aggregation, cfg.online_adjust,
                 eval_fn=lambda cand: self._eval_params(cand)[1],
@@ -631,6 +760,9 @@ class FederatedSimulation:
             last_sync=k_spec, sim_time=P(), commits=P(),
             buffer=P(), buffer_weight=P(), buffer_count=P(),
             in_buffer=k_spec,
+            # EF residuals shard like the other per-client state: each
+            # shard owns the [K_loc, N] client block of the [K, N] carry
+            error_fb=k_spec if self._ef_on else P(),
         )
 
         def block(state, round_ids, table):

@@ -4,6 +4,10 @@
 * ``divergence``     — fused per-client L2 divergence (criterion Md)
 * ``trimmed``        — fused coordinate-wise weighted trimmed mean
                        (robust aggregation, peel-reduce instead of sort)
+* ``quantize``       — blockwise absmax int8/int4 quantization + the
+                       fused dequantize-reduce ``qagg`` (compressed
+                       update streaming; oracle ``qagg_ref`` lives here
+                       too, next to the lossy primitives it checks)
 * ``flash_attention``— blockwise attention w/ GQA + sliding window
 * ``ref``            — pure-jnp oracles (+ attention_chunked, the XLA-level
                        online-softmax attention used by the serving path)

@@ -44,6 +44,29 @@ def flat_weighted_agg_shard(
     return shard.psum(part)
 
 
+def flat_qagg_shard(
+    q_loc: jax.Array,
+    scales_loc: jax.Array,
+    weights_loc: jax.Array,
+    block: int,
+    shard: ShardSpec,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """``Σ_k p_k · deq(q_k)`` with quantized rows sharded over client axes.
+
+    The compressed-wave commit: each shard runs the fused
+    dequantize-reduce (:func:`ops.flat_qagg`) on its int8
+    ``[S_loc, N]`` block + ``[S_loc, nb]`` scale sidecar, and one
+    ``psum`` over the *dequantized f32 partials* finishes the reduction
+    — so only the f32 ``[N]`` partial crosses shards, never a dequantized
+    wave.  ``weights_loc`` is this shard's row slice of the globally
+    normalized weight vector (slice, don't renormalize).
+    """
+    part = ops.flat_qagg(q_loc, scales_loc, weights_loc, block=block,
+                         interpret=interpret)
+    return shard.psum(part)
+
+
 def flat_divergence_sq_shard(
     stacked_loc: jax.Array,
     global_vec: jax.Array,

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.divergence import divergence_sq
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.quantize import QBLOCK, qagg, qagg_ref
 from repro.kernels.trimmed import trimmed_agg
 from repro.kernels.weighted_agg import weighted_agg
 from repro.utils.pytree import PyTree
@@ -62,6 +63,28 @@ def flat_weighted_agg(
                             interpret=interp)
     out = weights.astype(jnp.float32) @ stacked.astype(jnp.float32)
     return out.astype(stacked.dtype)
+
+
+def flat_qagg(
+    q: jax.Array,
+    scales: jax.Array,
+    weights: jax.Array,
+    block: int = QBLOCK,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """``Σ_k p_k · deq(q_k)`` without materializing the dequantized wave.
+
+    The compressed-path counterpart of :func:`flat_weighted_agg`: ``q``
+    is the round's int8 ``[S, N]`` quantized client matrix and ``scales``
+    its ``[S, nb]`` per-block absmax sidecar (``kernels.quantize``).  One
+    fused dequantize-reduce — the streaming Pallas kernel on TPU (int8
+    tiles, a quarter of the f32 HBM traffic), the einsum oracle
+    elsewhere.  Returns f32 ``[N]``.
+    """
+    use_pallas, interp = resolve_kernel_mode(interpret)
+    if use_pallas:
+        return qagg(q, scales, weights, block=block, interpret=interp)
+    return qagg_ref(q, scales, weights, block=block)
 
 
 def flat_divergence_sq(

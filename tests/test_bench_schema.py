@@ -24,8 +24,8 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH = os.path.join(ROOT, "BENCH_roundloop.json")
 README = os.path.join(ROOT, "benchmarks", "README.md")
 
-SECTIONS = ("dispatch", "strategies", "selection", "robust", "hotpath",
-            "scale")
+SECTIONS = ("dispatch", "strategies", "selection", "robust", "bytes",
+            "hotpath", "scale")
 
 #: fields every _run_to_target-style record carries
 RUN_FIELDS = ("rounds_run", "final_acc", "best_acc", "commits",
@@ -82,6 +82,39 @@ class TestCommittedSchema:
         for preset in rob["presets"]:
             for sname in rob["strategies"]:
                 _check_run_record(rob[f"{preset}/{sname}"])
+
+    def test_bytes_covers_compression_grid(self, bench):
+        by = bench["bytes"]
+        assert sorted(by["modes"]) == ["int4", "int8", "none"]
+        for preset in by["presets"]:
+            for mode in by["modes"]:
+                rec = by[f"{preset}/{mode}"]
+                _check_run_record(rec)
+                assert rec["compress"] == mode
+                assert rec["wire_bytes_per_upload"] > 0
+                if mode == "none":
+                    assert rec["bytes_reduction"] == pytest.approx(1.0)
+                    assert rec["wire_bytes_per_upload"] == \
+                        4 * by["num_params"]
+
+    def test_bytes_acceptance_envelope(self, bench):
+        """The PR's acceptance numbers: >=3.5x int8 / >=7x int4 wire
+        reduction at paper-CNN scale, and int8 + error feedback within
+        0.02 of the uncompressed best accuracy on ``tiered-fleet``."""
+        by = bench["bytes"]
+        paper = by["paper_cnn"]
+        assert paper["num_params"] > 6_000_000
+        assert paper["int8"]["bytes_reduction"] >= 3.5
+        assert paper["int4"]["bytes_reduction"] >= 7.0
+        base = by["tiered-fleet/none"]["best_acc"]
+        assert by["tiered-fleet/int8"]["best_acc"] >= base - 0.02
+        # the frontier is monotone in bytes: compressed runs that hit the
+        # target do so with strictly fewer uplink bytes than uncompressed
+        ref = by["tiered-fleet/none"]["uplink_bytes_to_target"]
+        for mode in ("int8", "int4"):
+            up = by[f"tiered-fleet/{mode}"]["uplink_bytes_to_target"]
+            if up is not None and ref is not None:
+                assert up < ref
 
     def test_hotpath_headline_fields(self, bench):
         h = bench["hotpath"]

@@ -72,6 +72,23 @@ class TestFleetExamples:
             assert name in report, f"strategy {name!r} not swept"
             assert 0.0 <= report[name]["best_acc"] <= 1.0
 
+    def test_async_fleet_compress_flag(self, tmp_path, monkeypatch, capsys):
+        # --compress int8 routes the whole strategy sweep through the
+        # quantized flat path (blockwise absmax + error feedback) and
+        # reports the wire-byte reduction
+        from repro.federated import STRATEGIES
+
+        out = tmp_path / "async_fleet_q.json"
+        _run_main("async_fleet",
+                  ["--clients", "8", "--rounds", "2", "--hidden", "16",
+                   "--block", "2", "--buffer", "2", "--compress", "int8",
+                   "--out", str(out)], monkeypatch)
+        assert "compress=int8" in capsys.readouterr().out
+        report = json.loads(out.read_text())
+        for name in STRATEGIES:
+            assert name in report, f"strategy {name!r} not swept"
+            assert 0.0 <= report[name]["best_acc"] <= 1.0
+
     def test_async_fleet_mesh_flag(self, tmp_path, monkeypatch):
         # --mesh runs the whole strategy sweep through the shard_map'd
         # flat path on the local device mesh (1 shard under tier-1 CPU;
@@ -94,6 +111,15 @@ class TestLightMains:
         _run_main("quickstart", [], monkeypatch)
         assert capsys.readouterr().out.strip()
 
+    def test_federated_llm_runs(self, monkeypatch, capsys):
+        # the Mode-B LM example at toy size — runs on the tier-1 jax pin
+        # through shard_map_compat/mesh_context (utils.sharding), newer
+        # jax through jax.shard_map/jax.set_mesh
+        _run_main("federated_llm",
+                  ["--steps", "2", "--layers", "1", "--d-model", "32",
+                   "--seq", "16", "--batch-per-client", "1"], monkeypatch)
+        assert "done" in capsys.readouterr().out
+
 
 @pytest.mark.slow
 class TestHeavyMains:
@@ -102,13 +128,10 @@ class TestHeavyMains:
                   ["--clients", "8", "--rounds", "2", "--hidden", "16",
                    "--out", str(tmp_path / "femnist")], monkeypatch)
 
-    def test_federated_llm_runs(self, monkeypatch):
-        # same jax floor as tests/test_distributed.py: the mesh path
-        # needs jax.sharding.AxisType (newer than the tier-1 pin)
-        import jax
-
-        if not hasattr(jax.sharding, "AxisType"):
-            pytest.skip("needs a jax with jax.sharding.AxisType")
+    def test_federated_llm_adjust_runs(self, monkeypatch):
+        # Algorithm-1 online adjustment on the LM: the m!-candidate
+        # sweep is the heavy variant of the fast smoke above
         _run_main("federated_llm",
-                  ["--steps", "2", "--layers", "1", "--d-model", "32",
-                   "--seq", "16", "--batch-per-client", "1"], monkeypatch)
+                  ["--adjust", "--steps", "2", "--layers", "1",
+                   "--d-model", "32", "--seq", "16",
+                   "--batch-per-client", "1"], monkeypatch)
