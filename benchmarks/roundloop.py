@@ -30,7 +30,12 @@ for the metric schema and sim-time units):
   (coordinate-wise trimmed mean, L2 clip + Gaussian noise).  Headline:
   trimmed mean holds its accuracy under the byzantine preset while
   plain sync tracks the poisoned mean; churn/diurnal rows price the
-  robustness tax when the fleet is unstable but honest.
+  robustness tax when the fleet is unstable but honest.  The
+  ``adaptive`` sub-table upgrades the attacker: a *colluding* cohort
+  (``byzantine-colluding`` preset, inner-product flip of its own
+  honest-mean estimate) against trimmed mean, krum, multi-krum and
+  clipped-dp — the clipped-dp row additionally reports the Rényi
+  accountant's ``(epsilon, delta)`` budget spent over the run.
 * **Bytes** — the compression frontier: the same sync workload per
   preset under ``compress in {none, int8, int4}`` (blockwise-absmax
   quantized client uploads + per-client error feedback through the flat
@@ -162,14 +167,20 @@ def _strategy_cfg(name: str, rounds: int, block: int,
 
 
 def _run_to_target(data, params, cfg: FedSimConfig,
-                   target_acc: float) -> dict:
-    """One simulation run, summarized on the virtual clock."""
+                   target_acc: float, with_epsilon: bool = False) -> dict:
+    """One simulation run, summarized on the virtual clock.
+
+    ``with_epsilon`` adds the DP accountant's spent budget at the last
+    eval boundary (``None`` unless the config enables accounting via
+    ``dp_delta``) — only the adaptive robust rows carry the column, so
+    the committed-schema contract for every other record is unchanged.
+    """
     sim = FederatedSimulation(data, params, mlp_loss, mlp_accuracy, cfg)
     res = sim.run(targets=(target_acc,), device_fracs=(0.99,), verbose=False)
     n_rounds = res.metrics[-1].round
     hit = next(((m.round, m.sim_time) for m in res.metrics
                 if m.global_acc >= target_acc), None)
-    return {
+    out = {
         "rounds_run": n_rounds,
         "final_acc": res.metrics[-1].global_acc,
         "best_acc": max(m.global_acc for m in res.metrics),
@@ -178,6 +189,9 @@ def _run_to_target(data, params, cfg: FedSimConfig,
         "rounds_to_target": hit[0] if hit else None,
         "sim_time_to_target": hit[1] if hit else None,
     }
+    if with_epsilon:
+        out["epsilon_spent"] = res.metrics[-1].epsilon_spent
+    return out
 
 
 def bench_selection(data, params, rounds: int, block: int,
@@ -265,6 +279,75 @@ def bench_robust(data, params, rounds: int, block: int,
             cfg = _robust_cfg(sname, preset, rounds, block, cohort)
             out[f"{preset}/{sname}"] = _run_to_target(data, params, cfg,
                                                       target_acc)
+    return out
+
+
+#: the adaptive-adversary sweep grid — the colluding preset against every
+#: defense that has a story for it (sync is omitted: it collapses, see
+#: tests/test_robust.py's adaptive separation gate)
+ADAPTIVE_STRATEGIES = ("trimmed-mean", "krum", "multi-krum", "clipped-dp")
+
+#: DP accounting knobs for the adaptive clipped-dp row — sized so the
+#: accountant reports a finite, meaningfully-composed budget over the
+#: bench schedule (q = 0.25 per commit), not a production privacy claim
+ADAPTIVE_DP = {"delta": 1e-3, "noise_multiplier": 0.5, "clip_norm": 1.0}
+
+
+def _adaptive_cfg(sname: str, rounds: int, block: int,
+                  cohort: int) -> FedSimConfig:
+    common = dict(
+        fraction=0.25, batch_size=10, local_epochs=1, lr=0.1,
+        max_rounds=rounds, eval_every=block,
+        scenario=ScenarioConfig(preset="byzantine-colluding",
+                                attack="colluding-flip", attack_scale=4.0,
+                                seed=0),
+    )
+    if sname == "trimmed-mean":
+        return FedSimConfig(
+            aggregation=AggregationConfig(priority=(2, 0, 1)),
+            strategy=make_strategy(
+                "trimmed-mean",
+                trim=min(max(1, cohort // 4), (cohort - 1) // 2)),
+            **common)
+    if sname in ("krum", "multi-krum"):
+        # f/m resolve per-cohort at trace time (f = (S-3)//2 tolerates
+        # the 25% colluders at both smoke and full cohort sizes)
+        return FedSimConfig(
+            aggregation=AggregationConfig(priority=(2, 0, 1)),
+            strategy=make_strategy(sname), **common)
+    if sname == "clipped-dp":
+        return FedSimConfig(
+            aggregation=AggregationConfig(
+                criteria=("Ds", "Ld", "Md", "update_norm"),
+                priority=(3, 2, 0, 1)),
+            strategy=make_strategy(
+                "clipped-dp", clip_norm=ADAPTIVE_DP["clip_norm"],
+                noise_multiplier=ADAPTIVE_DP["noise_multiplier"]),
+            dp_delta=ADAPTIVE_DP["delta"],
+            **common)
+    raise KeyError(sname)
+
+
+def bench_adaptive(data, params, rounds: int, block: int,
+                   target_acc: float = 0.75) -> dict:
+    """Adaptive-adversary sweep: the colluding cohort vs every defense.
+
+    The ``byzantine-colluding`` preset's attackers estimate the honest
+    update mean from their own cohort's local steps each round and send
+    its negation (``colluding-flip`` — the within-band payload that
+    degrades coordinate-wise trimming; see the separation gate in
+    ``tests/test_robust.py``).  Rows: trimmed mean (the static-attack
+    champion, measurably hurt here), krum / multi-krum (distance-based
+    selection, the adaptive-attack answer), and clipped-dp with live
+    Rényi accounting.  Every row carries the ``epsilon_spent`` column
+    (``None`` on rows without DP accounting).
+    """
+    cohort = max(1, round(0.25 * data.images.shape[0]))
+    out = {}
+    for sname in ADAPTIVE_STRATEGIES:
+        cfg = _adaptive_cfg(sname, rounds, block, cohort)
+        out[f"byzantine-colluding/{sname}"] = _run_to_target(
+            data, params, cfg, target_acc, with_epsilon=True)
     return out
 
 
@@ -771,6 +854,7 @@ def main(clients: int = 64, rounds: int = 64, block: int = 16,
     selection = bench_selection(sdata, sparams, strat_rounds, 10,
                                 target_acc, reuse=strat)
     robust = bench_robust(sdata, sparams, strat_rounds, 10, target_acc)
+    adaptive = bench_adaptive(sdata, sparams, strat_rounds, 10, target_acc)
     bytes_sec = bench_bytes(sdata, sparams, strat_rounds, 10, target_acc)
     hotpath = bench_hotpath(smoke=smoke)
     scale = bench_scale(smoke=smoke)
@@ -808,6 +892,14 @@ def main(clients: int = 64, rounds: int = 64, block: int = 16,
         rows.append((
             f"roundloop_robust_{preset}_{sname}_best_acc", s["best_acc"],
             f"final={s['final_acc']:.3f} after {s['rounds_run']} rounds",
+        ))
+    for key, s in adaptive.items():
+        _, sname = key.split("/")
+        eps = s["epsilon_spent"]
+        eps_txt = f"eps_spent={eps:.2f}" if eps is not None else "eps_spent=n/a"
+        rows.append((
+            f"roundloop_adaptive_{sname}_best_acc", s["best_acc"],
+            f"final={s['final_acc']:.3f}, {eps_txt}",
         ))
     for preset in BYTES_PRESETS:
         for mode in COMPRESS_SWEEP:
@@ -885,6 +977,14 @@ def main(clients: int = 64, rounds: int = 64, block: int = 16,
             "attack": {"name": "sign-flip", "frac": 0.25, "scale": 1.0},
             "target_acc": target_acc,
             "clients": strat_clients, "max_rounds": strat_rounds,
+            "adaptive": {
+                "preset": "byzantine-colluding",
+                "strategies": list(ADAPTIVE_STRATEGIES),
+                "attack": {"name": "colluding-flip", "frac": 0.25,
+                           "scale": 4.0},
+                "dp": dict(ADAPTIVE_DP),
+                **adaptive,
+            },
             **robust,
         },
         "bytes": bytes_sec,

@@ -18,6 +18,10 @@ is swept here automatically.  The registry currently holds:
 * ``trimmed-mean``   — byzantine-robust sync: coordinate-wise weighted
   trimmed mean (run ``--preset byzantine`` to watch it shrug off the
   sign-flip cohort that poisons plain sync),
+* ``krum`` / ``multi-krum`` — distance-based byzantine-robust selection:
+  commit the client(s) with the smallest summed distance to their
+  nearest neighbors (run ``--preset byzantine-colluding`` to see them
+  hold where coordinate-wise trimming degrades),
 * ``clipped-dp``     — per-client L2 clip + calibrated Gaussian noise
   (DP-FedAvg style), with the ``update_norm`` criterion leading the
   priority order.
@@ -113,6 +117,18 @@ def _config(name: str, args) -> FedSimConfig:
             strategy=make_strategy(
                 name, trim=min(cohort // 4, (cohort - 1) // 2)),
             **common)
+    if name in ("krum", "multi-krum"):
+        # distance scoring needs a cohort of >= 3 (self + 2 others after
+        # excluding f); bump tiny smoke cohorts up, keeping any mesh
+        # shard-multiple rounding intact
+        cohort = max(3, round(common["fraction"] * args.clients))
+        if getattr(args, "mesh_obj", None) is not None:
+            cohort += (-cohort) % args.mesh_shards
+        cohort = min(cohort, args.clients)
+        common["fraction"] = cohort / args.clients
+        return FedSimConfig(
+            aggregation=AggregationConfig(priority=(2, 0, 1)),
+            strategy=make_strategy(name), **common)
     if name == "clipped-dp":
         return FedSimConfig(
             aggregation=AggregationConfig(
@@ -167,6 +183,7 @@ def main() -> None:
         cohort = max(1, round(0.25 * args.clients))
         cohort += (-cohort) % n_sh   # round size up to a shard multiple
         args.mesh_obj = mesh
+        args.mesh_shards = n_sh
         args.mesh_fraction = cohort / args.clients
         print(f"[driver] mesh: {n_sh} client shard(s), "
               f"cohort {cohort}/{args.clients}")

@@ -8,11 +8,18 @@ Runs the on-device round loop once per preset at a fixed seed — identical
 sampling/batching streams, only the fleet differs — and reports final
 accuracy, mean participants per round, and rounds/sec, showing how
 dropouts, duty cycles, stragglers, and adversaries reshape device-aware
-aggregation.  The ``byzantine`` preset is run twice: once under plain
-sync (watch the sign-flip cohort poison the mean) and once under the
-coordinate-wise trimmed mean (``byzantine+trimmed-mean`` row).
+aggregation.  The hostile preset gets a second *counterpoint* row under
+a defending server: by default ``byzantine`` is rerun under the
+coordinate-wise trimmed mean (``byzantine+trimmed-mean``).  ``--attack
+colluding`` swaps the counterpoint to the adaptive ``colluding-flip``
+cohort on ``byzantine-colluding``, and ``--strategy`` picks the defense
+(``trimmed-mean`` / ``krum`` / ``multi-krum`` / ``clipped-dp``); the
+``clipped-dp`` row meters its Rényi privacy budget and reports the
+``(epsilon, delta)`` spent.
 
     PYTHONPATH=src python examples/scenario_fleet.py --rounds 60
+    PYTHONPATH=src python examples/scenario_fleet.py \\
+        --attack colluding --strategy multi-krum
 """
 from __future__ import annotations
 
@@ -48,6 +55,16 @@ def main() -> None:
                     help="use the paper CNN (slow on CPU) instead of the MLP")
     ap.add_argument("--bias-sampling", action="store_true",
                     help="weight client selection by expected availability")
+    ap.add_argument("--attack", default="static",
+                    choices=("static", "colluding"),
+                    help="payload for the hostile counterpoint row: the "
+                         "byzantine preset's static sign-flip, or the "
+                         "adaptive colluding-flip cohort on "
+                         "byzantine-colluding")
+    ap.add_argument("--strategy", default="trimmed-mean",
+                    choices=("trimmed-mean", "krum", "multi-krum",
+                             "clipped-dp"),
+                    help="defense for the hostile counterpoint row")
     ap.add_argument("--out", default="checkpoints/scenarios.json")
     args = ap.parse_args()
 
@@ -61,26 +78,54 @@ def main() -> None:
         loss_fn, acc_fn = mlp_loss, mlp_accuracy
 
     # the registry sweep, plus the robust-aggregation counterpoint for
-    # the byzantine preset (same fleet, trimmed-mean server)
-    runs = [(preset, None) for preset in sorted(PRESETS)]
-    if "byzantine" in PRESETS:
-        # quarter-cohort trim, clamped so 2*trim < cohort always holds
-        # (tiny --clients smoke runs degrade to a plain weighted mean)
+    # the hostile preset picked by --attack (same fleet, a defending
+    # server picked by --strategy)
+    runs = [dict(label=preset, preset=preset) for preset in sorted(PRESETS)]
+    hostile = ("byzantine" if args.attack == "static"
+               else "byzantine-colluding")
+    if hostile in PRESETS:
+        row = dict(label=f"{hostile}+{args.strategy}", preset=hostile,
+                   dp=args.strategy == "clipped-dp")
+        if args.attack == "colluding":
+            # override the preset's default colluding-alie payload with
+            # the inner-product flip that actually separates defenses
+            row["scenario_kw"] = dict(attack="colluding-flip",
+                                      attack_scale=4.0)
         cohort = max(1, round(0.2 * args.clients))
-        trim = min(cohort // 4, (cohort - 1) // 2)
-        runs.append(("byzantine", make_strategy("trimmed-mean", trim=trim)))
+        if args.strategy == "trimmed-mean":
+            # quarter-cohort trim, clamped so 2*trim < cohort always
+            # holds (tiny --clients smoke runs degrade to a plain mean)
+            row["strategy"] = make_strategy(
+                "trimmed-mean", trim=min(cohort // 4, (cohort - 1) // 2))
+        elif args.strategy in ("krum", "multi-krum"):
+            # distance scoring needs a cohort of >= 3; bump tiny smoke
+            # cohorts up (f/m resolve per-cohort at trace time)
+            row["strategy"] = make_strategy(args.strategy)
+            row["fraction"] = min(args.clients, max(3, cohort)) / args.clients
+        else:  # clipped-dp: clip + noise, the Rényi accountant metering
+            row["strategy"] = make_strategy("clipped-dp", clip_norm=1.0,
+                                            noise_multiplier=0.5)
+            row["aggregation"] = AggregationConfig(
+                criteria=("Ds", "Ld", "Md", "update_norm"),
+                priority=(3, 2, 0, 1))
+            row["cfg_kw"] = dict(dp_delta=1e-3)
+        runs.append(row)
 
     report = {}
-    for preset, strategy in runs:
-        label = preset if strategy is None else f"{preset}+trimmed-mean"
+    for run in runs:
+        label = run["label"]
         cfg = FedSimConfig(
-            fraction=0.2, batch_size=10, local_epochs=1, lr=0.05,
+            fraction=run.get("fraction", 0.2), batch_size=10,
+            local_epochs=1, lr=0.05,
             max_rounds=args.rounds, eval_every=args.block,
             online_adjust=args.adjust,
-            aggregation=AggregationConfig(priority=(2, 0, 1)),
-            strategy=strategy,
-            scenario=ScenarioConfig(preset=preset,
-                                    bias_sampling=args.bias_sampling),
+            aggregation=run.get("aggregation",
+                                AggregationConfig(priority=(2, 0, 1))),
+            strategy=run.get("strategy"),
+            scenario=ScenarioConfig(preset=run["preset"],
+                                    bias_sampling=args.bias_sampling,
+                                    **run.get("scenario_kw", {})),
+            **run.get("cfg_kw", {}),
         )
         sim = FederatedSimulation(data, params, loss_fn, acc_fn, cfg)
         t0 = time.time()
@@ -97,6 +142,12 @@ def main() -> None:
         print(f"[{label:22s}] final={accs[-1]:.3f} best={max(accs):.3f} "
               f"mean_participants={np.mean(parts):.1f} "
               f"({args.rounds / dt:.1f} rounds/s)")
+        if run.get("dp"):
+            eps = res.metrics[-1].epsilon_spent if res.metrics else None
+            report[label]["epsilon_spent"] = eps
+            eps_txt = f"{eps:.2f}" if eps is not None else "n/a"
+            print(f"[{label:22s}] privacy budget spent: "
+                  f"eps={eps_txt} at delta=1e-3")
 
     out = Path(args.out)
     out.parent.mkdir(parents=True, exist_ok=True)

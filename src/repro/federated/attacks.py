@@ -16,11 +16,31 @@ flat ``[S, N]`` representations bit-identically:
 * ``random``    — ``delta' = scale * N(0, I)``: an uncoordinated noise
   attacker (also models a faulty device, not just a malicious one).
 
+On top of the static families sit two *colluding* (adaptive) payloads —
+``colluding-alie`` and ``colluding-flip`` — that need the corrupt
+cohort's empirical update mean/std (:func:`cohort_stats`) before any
+per-client payload can be crafted, so the simulation layer injects them
+in a second vmapped pass after the honest local training wave instead of
+inside ``local_train``.  Both passes attack the same pre-ravel, pre-
+quantize ``delta``, so pytree, flat, quantized and mesh paths see
+identical payloads.
+
+Quantization interaction: every attack (static or colluding) lands
+*before* the int8/int4 blockwise quantizer — the attacker corrupts the
+update it uploads, then the wire compresses it like any honest payload.
+Defenses therefore see the *dequantized reconstruction* of the attacked
+delta, never the exact attacked values; blockwise absmax scales are
+per-client, so a scaled/flipped payload cannot smuggle extra magnitude
+past the quantizer, and the int8 + byzantine trajectory stays inside the
+documented accuracy envelope of the uncompressed one (regression-pinned
+in ``tests/test_robust.py``).
+
 Defenses live in ``federated.engine`` (``TrimmedMeanStrategy``,
-``ClippedDPStrategy``) and ``core.criteria`` (``update_norm``).  The
-module is imported by the ``byzantine`` scenario preset, by
-``benchmarks/roundloop.py``'s robust section, and re-exported to the test
-suite through ``tests/_attacks.py``.
+``ClippedDPStrategy``, ``KrumStrategy``/multi-Krum) and
+``core.criteria`` (``update_norm``).  The module is imported by the
+``byzantine``/``byzantine-colluding`` scenario presets, by
+``benchmarks/roundloop.py``'s robust section, and re-exported to the
+test suite through ``tests/_attacks.py``.
 """
 from __future__ import annotations
 
@@ -73,6 +93,167 @@ def get_attack(name: str) -> AttackFn:
     return ATTACKS[name]
 
 
+# --------------------------------------------------------------------------
+# Colluding (adaptive) payloads
+#
+# A colluding cohort first runs *honest* local SGD, pools its own updates
+# into per-coordinate mean/std estimates of the honest direction (the
+# attackers are sampled from the same data distribution, so their honest
+# steps are an unbiased proxy), then every colluder uploads a payload
+# crafted from those shared statistics.  Because the payload depends on
+# cross-client statistics it cannot be produced inside the per-client
+# vmapped ``local_train``; ``simulation._build_round_step`` runs
+# :func:`cohort_stats` on the honest wave and a second vmapped
+# :func:`apply_colluding_attack` pass instead.  Like the static attacks,
+# the payload replaces the pre-ravel / pre-quantize delta, so all four
+# server representations (pytree, flat, quantized, mesh) agree.
+# --------------------------------------------------------------------------
+
+#: jitter multiplier for ``colluding-alie`` — colluders sit at the same
+#: z-shifted point *plus* unit-σ per-colluder noise.  The jitter is
+#: load-bearing against distance defenses in the *other* direction:
+#: without it the colluders are mutually distance-zero and Krum would
+#: score them best; with it they look like ordinary honest samples
+#: shifted by ``scale`` standard deviations.
+ALIE_JITTER = 1.0
+
+#: ``fn(scale, key, mu, sigma) -> crafted delta`` — colluding payloads
+#: ignore the client's own trained delta; they are pure functions of the
+#: cohort statistics (plus a per-client key for jitter).
+CollusionFn = Callable[[float, jax.Array, PyTree, PyTree], PyTree]
+
+
+def colluding_alie(scale: float, key: jax.Array, mu: PyTree,
+                   sigma: PyTree) -> PyTree:
+    """ALIE-style z-score-bounded shift: ``delta' = mu - scale*sigma + sigma*eps``.
+
+    "A Little Is Enough" (Baruch et al., 2019): every colluder reports
+    the estimated honest mean shifted by ``scale`` (the z-score ``z``)
+    standard deviations, staying inside the band that coordinate-wise
+    trimming keeps (for ``z`` below the order statistics of the honest
+    sample, the payload is never the outlier that gets trimmed), yet
+    biasing the trimmed mean by ``O(z * sigma)`` every round.  Per-
+    colluder unit-σ jitter ``eps ~ N(0, I)`` (see :data:`ALIE_JITTER`)
+    keeps the colluders from collapsing onto one mutual-distance-zero
+    point.  The jitter is drawn as one flat ``N(0,1)`` vector sliced
+    per-leaf in ravel order, so the flat ``[S, N]`` path and the pytree
+    path consume bit-identical streams.
+    """
+    leaves, treedef = jax.tree.flatten(mu)
+    total = sum(int(x.size) for x in leaves)
+    z = jax.random.normal(key, (total,), jnp.float32)
+    out, off = [], 0
+    for m, s in zip(leaves, jax.tree.leaves(sigma)):
+        eps = z[off:off + m.size].reshape(m.shape)
+        off += int(m.size)
+        out.append((m - scale * s + ALIE_JITTER * s * eps).astype(m.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def colluding_flip(scale: float, key: jax.Array, mu: PyTree,
+                   sigma: PyTree) -> PyTree:
+    """Inner-product flip: ``delta' = -scale * mu``.
+
+    The cohort uploads the *negated* estimated honest mean — maximally
+    negative inner product with the honest direction.  Plain weighted
+    averaging is dragged backwards; distance defenses catch it easily
+    (the payload sits ``(1 + scale) * ||mu||`` away from the honest
+    cluster), which is exactly the separation the robust tests pin.
+    """
+    del key, sigma
+    return jax.tree.map(lambda m: -scale * m, mu)
+
+
+#: colluding attack name -> :data:`CollusionFn`.  Kept separate from
+#: :data:`ATTACKS` because the call signature differs (cohort statistics
+#: instead of the client's own delta) and the simulation layer must
+#: restructure injection when one of these is active.
+COLLUDING: Dict[str, CollusionFn] = {
+    "colluding-alie": colluding_alie,
+    "colluding-flip": colluding_flip,
+}
+
+
+def is_colluding(name: str) -> bool:
+    """True iff ``name`` is an adaptive (cohort-statistics) attack."""
+    return name in COLLUDING
+
+
+def get_colluding(name: str) -> CollusionFn:
+    if name not in COLLUDING:
+        raise KeyError(
+            f"unknown colluding attack {name!r}; available: "
+            f"{sorted(COLLUDING)}")
+    return COLLUDING[name]
+
+
+def validate_attack(name: str) -> None:
+    """Fail fast unless ``name`` is a known static *or* colluding attack."""
+    if not is_colluding(name):
+        get_attack(name)
+
+
+def cohort_stats(delta: PyTree, corrupt: jax.Array, total=None, psum=None):
+    """Per-coordinate mean/std of the corrupt cohort's honest updates.
+
+    ``delta`` is the stacked update wave (every leaf has a leading
+    ``[S_loc]`` client axis), ``corrupt`` the matching 0/1 row mask.
+    Returns ``(mu, sigma)`` pytrees shaped like one client's delta.
+
+    Under the mesh path each shard holds only its row block: pass the
+    shard's ``psum`` to finish the cross-shard sums and the *replicated*
+    cohort size as ``total`` (computed from the full selection's corrupt
+    mask, identical on every shard) so the denominators agree bit-for-bit
+    with the single-device run up to f32 reduction order.
+    """
+    c = corrupt.astype(jnp.float32)
+    cnt = jnp.sum(c) if total is None else total
+    denom = jnp.maximum(cnt, 1.0)
+
+    def one(x):
+        w = c.reshape((-1,) + (1,) * (x.ndim - 1))
+        s1 = jnp.sum(w * x, axis=0)
+        s2 = jnp.sum(w * x * x, axis=0)
+        if psum is not None:
+            s1, s2 = psum(s1), psum(s2)
+        m = s1 / denom
+        var = jnp.maximum(s2 / denom - m * m, 0.0)
+        return m, jnp.sqrt(var)
+
+    leaves, treedef = jax.tree.flatten(delta)
+    pairs = [one(x) for x in leaves]
+    mu = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+    sigma = jax.tree.unflatten(treedef, [p[1] for p in pairs])
+    return mu, sigma
+
+
+def apply_colluding_attack(
+    name: str,
+    trained: PyTree,
+    global_params: PyTree,
+    corrupt: jax.Array,
+    scale: float,
+    key: jax.Array,
+    mu: PyTree,
+    sigma: PyTree,
+) -> PyTree:
+    """One client's post-training params with the colluding payload swapped in.
+
+    The second-pass analogue of :func:`apply_attack`: runs per client
+    (vmapped over the trained wave with ``mu``/``sigma`` broadcast), and
+    like its static sibling selects the untouched ``trained`` pytree for
+    honest rows, so an all-honest mask reproduces the clean trajectory
+    bit-for-bit.
+    """
+    fn = get_colluding(name)
+    bad_delta = fn(scale, key, mu, sigma)
+    is_bad = corrupt > 0
+    return jax.tree.map(
+        lambda p, g, b: jnp.where(is_bad, g + b, p),
+        trained, global_params, bad_delta,
+    )
+
+
 def apply_attack(
     name: str,
     trained: PyTree,
@@ -115,7 +296,7 @@ def corrupt_fleet(
     injection into its jitted round step.  ``frac=0`` clears the mask
     back to an honest fleet.
     """
-    get_attack(attack)                       # fail fast on bad names
+    validate_attack(attack)                  # fail fast on bad names
     k = fleet.num_clients
     m = int(math.ceil(frac * k))
     if not 0 <= m <= k:

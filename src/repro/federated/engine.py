@@ -33,10 +33,19 @@ execution are *policies* over one engine rather than three copies of it:
     weighted trimmed mean over the round's client matrix (one fused
     peel-reduce on the flat path — ``kernels/trimmed.py``), composing
     with the prioritized criteria weights.
+  - :class:`KrumStrategy` / :class:`MultiKrumStrategy` — distance-based
+    Byzantine-robust sync (Blanchard et al., 2017): nearest-neighbor
+    distance scores over the round's client matrix (one Gram-accumulating
+    streaming pass on the flat path — ``kernels/krum.py``) select the
+    ``m`` most-central clients; catches the colluding within-trim-band
+    payloads a coordinate-wise trim absorbs.
   - :class:`ClippedDPStrategy` — DP-FedAvg-style hardening: per-client
     L2 clipping plus calibrated Gaussian noise on the committed mean;
     pairs with the registered ``update_norm`` criterion so oversized
-    updates lose weight *before* the clip engages.
+    updates lose weight *before* the clip engages.  The noise knob is a
+    real privacy budget: ``federated.privacy`` accounts the subsampled-
+    Gaussian RDP of every commit and the simulation reports/enforces the
+    spent ``(epsilon, delta)``.
 
 Virtual time: scenario fleets assign each selected client a completion
 time ``dt_k`` (``scenarios.completion_time``).  A sync round lasts
@@ -643,6 +652,109 @@ class TrimmedMeanStrategy(AggregationStrategy):
 
 
 @dataclass(frozen=True)
+class KrumStrategy(AggregationStrategy):
+    """Distance-based Byzantine-robust sync: Krum / multi-Krum selection.
+
+    Blanchard et al. (2017): score every client by the summed squared
+    distances to its ``S - f - 2`` nearest cohort neighbors and commit
+    the weighted mean of the ``m`` best-scored clients' models (``m = 1``
+    is plain Krum; this class defaults to it, the ``multi-krum`` registry
+    entry to ``m = S - f - 2``).  Where the coordinate-wise trimmed mean
+    absorbs a *small per-coordinate bias* from colluders hiding inside
+    the trim band (the ALIE failure mode), Krum is coordinate-blind: a
+    colluding cohort shifted ``z`` standard deviations from the honest
+    mean pays that offset in every pairwise distance and scores worse
+    than the honest cluster, so the commit simply excludes it.
+
+    Breakdown point: the scoring is sound for ``f < (S - 2) / 2``
+    corrupt clients in the round cohort (the neighbor count must exceed
+    the corrupt count so every honest score is anchored by honest
+    neighbors).  ``f = None`` defaults to the largest admissible bound
+    ``(S - 3) // 2``; the constructor cannot check ``S``, so the bound
+    is validated at trace time in :meth:`step` and property-tested in
+    ``tests/test_robust.py``.
+
+    Selected clients are averaged by their renormalized prioritized
+    multi-criteria weights, so device-awareness composes with the
+    defense exactly as it does for the trimmed mean.  Dropped uploads
+    (zero contribution) score ``+inf`` and are never selected, but their
+    honest-trained vectors still serve as neighbors.  The pairwise
+    distances run as one Gram-accumulating streaming pass on the flat
+    path (``kernels/krum.py``), as summed per-leaf distances feeding a
+    single shared selection on the pytree path, and as shard-local
+    ``X_loc @ X.T`` strips finished by ``all_gather``/``psum`` under a
+    mesh — all three pick identical client sets.
+
+    Algorithm-1 online adjustment is a linear-sweep feedback loop and
+    does not compose with a selection-based reduction; not supported.
+    """
+
+    f: Optional[int] = None
+    m: int = 1
+
+    supports_online_adjust = False
+
+    def _resolve(self, S: int) -> Tuple[int, int]:
+        f = self.f if self.f is not None else max(0, (S - 3) // 2)
+        if not (0 <= f and 2 * f + 2 < S):
+            raise ValueError(
+                f"KrumStrategy needs f < (S - 2) / 2; got f={f} for S={S}"
+            )
+        m = self.m if self.m is not None else max(1, S - f - 2)
+        if not 1 <= m <= S - f - 2:
+            raise ValueError(
+                f"KrumStrategy needs 1 <= m <= S - f - 2; got m={m} "
+                f"for S={S}, f={f}"
+            )
+        return f, m
+
+    def step(self, state, inp, cfg, online_adjust, eval_fn):
+        S = int(inp.mask.shape[0])
+        f, m = self._resolve(S)
+        p = compute_weights(inp.criteria, cfg, tuple(cfg.priority),
+                            mask=inp.contrib)
+        if inp.shard is not None:
+            new_params, _ = kcoll.flat_krum_agg_shard(
+                inp.stacked, p, f, m, inp.shard
+            )
+        elif _is_flat(inp.stacked):
+            new_params, _ = kops.flat_krum_agg(inp.stacked, p, f, m)
+        else:
+            new_params, _ = kops.tree_krum_agg(inp.stacked, p, f, m)
+
+        alive = jnp.sum(inp.contrib) > 0
+        new_params = jax.tree.map(
+            lambda a, b: jnp.where(alive, a, b), new_params, state.params
+        )
+        barrier = jnp.max(inp.dt * inp.mask)
+        new_state = replace(
+            state,
+            params=new_params,
+            last_sync=_scatter_round(state.last_sync, inp.sel, inp.mask,
+                                     inp.rnd, alive.astype(jnp.float32),
+                                     inp.shard),
+            sim_time=state.sim_time + jnp.where(alive, barrier, 1.0),
+            commits=state.commits + alive.astype(jnp.int32),
+        )
+        ys = {
+            "entropy": _entropy(p),
+            "priority_idx": state.priority_idx,
+            "backtracked": jnp.asarray(False),
+            "num_evaluated": jnp.asarray(1, jnp.int32),
+        }
+        return new_state, ys
+
+
+@dataclass(frozen=True)
+class MultiKrumStrategy(KrumStrategy):
+    """Multi-Krum: ``m = None`` resolves to ``S - f - 2`` at trace time —
+    average every client whose score the Krum criterion trusts, instead
+    of committing a single model.  Registered as ``"multi-krum"``."""
+
+    m: Optional[int] = None
+
+
+@dataclass(frozen=True)
 class ClippedDPStrategy(AggregationStrategy):
     """Per-client L2 clip + calibrated Gaussian noise (DP-FedAvg style).
 
@@ -767,6 +879,8 @@ STRATEGIES = {
     "buffered-async": BufferedAsyncStrategy,
     "fedavg": FedAvgStrategy,
     "trimmed-mean": TrimmedMeanStrategy,
+    "krum": KrumStrategy,
+    "multi-krum": MultiKrumStrategy,
     "clipped-dp": ClippedDPStrategy,
 }
 

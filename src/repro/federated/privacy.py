@@ -1,0 +1,166 @@
+"""Rényi-DP (moments) accountant for the subsampled Gaussian mechanism.
+
+``ClippedDPStrategy`` clips every client update to ``clip_norm`` and adds
+``N(0, (noise_multiplier * clip_norm / n)^2)`` to the committed mean —
+the Gaussian mechanism with sensitivity ``clip_norm / n`` and noise
+standard deviation ``noise_multiplier`` *in sensitivity units*.  Each
+commit touches a uniformly-sampled cohort (``q = S / K`` for sync-style
+strategies, ``q = buffer_size / K`` per buffered-async commit), so the
+per-commit privacy cost is that of the *subsampled* Gaussian mechanism,
+and the run's total cost composes across commits.
+
+This module is the accounting side of that story, deliberately kept
+host-side: stdlib ``math`` only, no jax (pinned by
+``tests/test_privacy.py``), evaluated at eval boundaries in
+``FederatedSimulation.run`` — never traced, never jitted, bit-for-bit
+deterministic.
+
+The machinery is the standard Rényi-DP accountant (Mironov 2017; Abadi
+et al. 2016's moments accountant is the same object up to a change of
+variables; subsampled amplification per Mironov-Talwar-Zhang 2019):
+
+1. per-commit Rényi divergence bound at integer orders ``alpha``:
+
+   ``RDP(alpha) = log( sum_{k=0}^{alpha} C(alpha, k) (1-q)^(alpha-k) q^k
+                       exp(k (k-1) / (2 sigma^2)) ) / (alpha - 1)``
+
+   (for ``q = 1`` this collapses to the plain Gaussian bound
+   ``alpha / (2 sigma^2)``);
+2. linear composition: ``RDP_total(alpha) = steps * RDP(alpha)``;
+3. conversion to ``(epsilon, delta)`` with the improved bound
+   (Canonne-Kairouz-Steinke 2020):
+
+   ``epsilon = RDP_total + log((alpha - 1) / alpha)
+               - (log(delta) + log(alpha)) / (alpha - 1)``
+
+   minimized over the order grid.
+
+Everything is computed in log space (``math.lgamma`` for the binomial
+coefficients) so large orders and tiny sampling rates do not underflow.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Sequence, Tuple
+
+#: default Rényi order grid — dense small orders (tight for large noise /
+#: many steps) plus sparse large ones (tight for small noise / few steps).
+DEFAULT_ORDERS: Tuple[int, ...] = tuple(range(2, 65)) + (
+    72, 80, 96, 128, 192, 256, 512)
+
+
+def _log_binom(n: int, k: int) -> float:
+    return (math.lgamma(n + 1) - math.lgamma(k + 1)
+            - math.lgamma(n - k + 1))
+
+
+def _logsumexp(xs: Sequence[float]) -> float:
+    m = max(xs)
+    if math.isinf(m):
+        return m
+    return m + math.log(sum(math.exp(x - m) for x in xs))
+
+
+def rdp_subsampled_gaussian(q: float, noise_multiplier: float,
+                            order: int) -> float:
+    """Per-step RDP of the Poisson-subsampled Gaussian at integer ``order``.
+
+    ``q`` is the sampling rate, ``noise_multiplier`` the noise standard
+    deviation in clip-norm (sensitivity) units.  Returns ``+inf`` for a
+    noiseless mechanism and ``0`` for an empty one (``q = 0``).
+    """
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"sampling rate {q} outside [0, 1]")
+    if order < 2 or int(order) != order:
+        raise ValueError(f"integer order >= 2 required, got {order}")
+    if q == 0.0:
+        return 0.0
+    if noise_multiplier <= 0.0:
+        return math.inf
+    sigma2 = float(noise_multiplier) ** 2
+    if q == 1.0:
+        return order / (2.0 * sigma2)
+    order = int(order)
+    log_q, log_1mq = math.log(q), math.log1p(-q)
+    terms = [
+        _log_binom(order, k) + k * log_q + (order - k) * log_1mq
+        + k * (k - 1) / (2.0 * sigma2)
+        for k in range(order + 1)
+    ]
+    return max(0.0, _logsumexp(terms) / (order - 1))
+
+
+def rdp_to_epsilon(rdp: float, order: int, delta: float) -> float:
+    """Improved RDP -> (epsilon, delta) conversion at one order."""
+    if not 0.0 < delta < 1.0:
+        raise ValueError(f"delta must be in (0, 1), got {delta}")
+    if math.isinf(rdp):
+        return math.inf
+    eps = (rdp + math.log((order - 1) / order)
+           - (math.log(delta) + math.log(order)) / (order - 1))
+    return max(0.0, eps)
+
+
+def epsilon_spent(
+    q: float,
+    noise_multiplier: float,
+    steps: int,
+    delta: float,
+    orders: Sequence[int] = DEFAULT_ORDERS,
+) -> float:
+    """Total ``epsilon`` after ``steps`` subsampled-Gaussian commits.
+
+    Composes the per-step RDP linearly across ``steps`` commits at every
+    order in the grid, converts each to an ``(epsilon, delta)`` pair and
+    returns the minimum — the accountant's bound on the run so far.
+    ``steps = 0`` spends nothing.
+    """
+    if steps < 0:
+        raise ValueError(f"steps must be >= 0, got {steps}")
+    if steps == 0:
+        return 0.0
+    return min(
+        rdp_to_epsilon(steps * rdp_subsampled_gaussian(q, noise_multiplier,
+                                                       a), a, delta)
+        for a in orders
+    )
+
+
+def commit_sampling_rate(num_clients: int, round_size: int,
+                         buffer_size=None) -> float:
+    """Per-commit sampling rate ``q`` for the engine's commit schedules.
+
+    Sync-style strategies commit once per surviving round over the round
+    cohort: ``q = round_size / num_clients``.  Buffered-async commits a
+    ``buffer_size``-arrival buffer instead (possibly spanning several
+    waves): ``q = buffer_size / num_clients``.  Either is clamped to 1.
+    """
+    if num_clients < 1:
+        raise ValueError(f"num_clients must be >= 1, got {num_clients}")
+    cohort = round_size if buffer_size is None else buffer_size
+    if cohort < 1:
+        raise ValueError(f"commit cohort must be >= 1, got {cohort}")
+    return min(1.0, cohort / num_clients)
+
+
+@dataclass(frozen=True)
+class GaussianAccountant:
+    """A fixed ``(q, noise_multiplier, delta)`` schedule's running budget.
+
+    One instance per run: ``q`` and the noise multiplier are round-
+    invariant for both commit schedules the engine supports (sync commits
+    every surviving round with ``q = S / K``; buffered-async commits a
+    ``buffer_size``-client buffer with ``q = buffer_size / K``), so the
+    spent budget is a pure function of the commit count.
+    """
+
+    q: float
+    noise_multiplier: float
+    delta: float
+    orders: Tuple[int, ...] = DEFAULT_ORDERS
+
+    def epsilon(self, steps: int) -> float:
+        """``epsilon`` spent after ``steps`` commits (monotone in steps)."""
+        return epsilon_spent(self.q, self.noise_multiplier, int(steps),
+                             self.delta, self.orders)

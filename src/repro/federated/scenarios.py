@@ -285,6 +285,28 @@ def _byzantine(key, n: int, cfg: ScenarioConfig) -> DeviceFleet:
     )
 
 
+def _byzantine_colluding(key, n: int, cfg: ScenarioConfig) -> DeviceFleet:
+    """`byzantine` base, attackers upgraded to a *colluding* cohort.
+
+    Same tiered fleet, same corrupt draw, same tier-0 promotion as
+    :func:`_byzantine`, but the payload is adaptive: the cohort pools its
+    own honest local steps into mean/std estimates and uploads ALIE-style
+    within-trim-band shifts (``colluding-alie``, the default) or the
+    negated honest mean (``colluding-flip``).  ``cfg.attack`` may name
+    either colluding family; a static name is upgraded to the default so
+    ``--preset byzantine-colluding`` always actually colludes.
+    ``cfg.attack_scale`` is the ALIE z-score (how many cohort standard
+    deviations the crafted payload shifts the estimated honest mean) —
+    large enough to bias a coordinate-wise trim, small enough that
+    distance defenses still see a plausibly-honest point.
+    """
+    from repro.federated.attacks import is_colluding
+
+    attack = cfg.attack if is_colluding(cfg.attack) else "colluding-alie"
+    hostile = dataclasses.replace(cfg, attack=attack)
+    return _byzantine(key, n, hostile)
+
+
 #: preset name -> fleet sampler ``(key, num_clients, cfg) -> DeviceFleet``:
 #:   * ``uniform``       — identity fleet: always on, no dropout, 1x compute
 #:     (reproduces mask-free runs bit for bit — the golden-test preset)
@@ -301,6 +323,10 @@ def _byzantine(key, n: int, cfg: ScenarioConfig) -> DeviceFleet:
 #:     (amplitude 0.7-0.95): trough rounds are starved to 5-30% of peak
 #:   * ``byzantine``     — tiered fleet + ``corrupt_frac`` attackers
 #:     (``attack`` / ``attack_scale`` knobs) promoted to the fastest tier
+#:   * ``byzantine-colluding`` — same fleet, adaptive cohort: attackers
+#:     estimate the honest mean/std from their own local steps and upload
+#:     within-trim-band ALIE shifts (or the negated mean) — the
+#:     trimmed-mean failure mode that distance defenses (Krum) catch
 PRESETS: Dict[str, object] = {
     "uniform": _uniform,
     "mobile-heavy": _mobile_heavy,
@@ -309,6 +335,7 @@ PRESETS: Dict[str, object] = {
     "churn": _churn,
     "diurnal": _diurnal,
     "byzantine": _byzantine,
+    "byzantine-colluding": _byzantine_colluding,
 }
 
 

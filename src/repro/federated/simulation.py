@@ -145,6 +145,16 @@ class FedSimConfig:
     the client-axis sizes.  ``mesh=None`` (default) is the plain
     single-device program.
 
+    ``dp_delta``/``dp_epsilon`` turn the :class:`ClippedDPStrategy` noise
+    knob into a real privacy budget: with ``dp_delta`` set (and a noised
+    clipped-DP strategy configured) every eval point reports the spent
+    ``(epsilon, dp_delta)`` of the run so far — subsampled-Gaussian RDP
+    composed over the commits actually made, for both the sync and the
+    buffered-async commit schedules (``federated.privacy``).  Setting
+    ``dp_epsilon`` additionally makes the budget *enforced*: the run
+    halts at the first eval boundary where the spent ``epsilon`` reaches
+    the target and the result is flagged ``budget_exhausted``.
+
     ``compress`` turns on compressed update streaming (flat path only):
     each client's flat update is quantized to int8/int4 with per-block
     absmax scales (``kernels.quantize``, block size ``quant_block`` —
@@ -178,6 +188,8 @@ class FedSimConfig:
     compress: str = "none"         # "none" | "int8" | "int4" update streaming
     error_feedback: bool = True    # carry per-client EF residuals (compressed)
     quant_block: int = kquant.QBLOCK  # absmax scale granularity (kernel tile)
+    dp_delta: Optional[float] = None    # account (eps, delta) spent per commit
+    dp_epsilon: Optional[float] = None  # halt when spent eps reaches this
 
 
 @dataclass
@@ -192,6 +204,7 @@ class RoundMetrics:
     participants: int              # clients surviving the scenario mask
     sim_time: float = 0.0          # virtual clock at this eval point
     commits: int = 0               # global updates committed so far
+    epsilon_spent: Optional[float] = None  # DP budget so far (accounting on)
 
 
 @dataclass
@@ -205,6 +218,7 @@ class SimResult:
     rounds_to_target: Dict[Tuple[float, float], Optional[int]]
     # (target_acc, frac_devices) -> first round achieving it (None if never)
     final_state: Optional[ServerState] = None
+    budget_exhausted: bool = False  # run halted on the dp_epsilon target
 
 
 class FederatedSimulation:
@@ -253,6 +267,36 @@ class FederatedSimulation:
                 f"{type(self.policy).__name__} requires a device fleet — "
                 "set FedSimConfig.scenario"
             )
+        # DP accounting: host-side RDP accountant over the commit schedule.
+        # q is the per-commit sampling rate — S / K for sync-style commits
+        # (one commit per surviving round over the round cohort), or
+        # buffer_size / K for strategies that commit a client buffer.
+        self._accountant = None
+        if config.dp_epsilon is not None and config.dp_delta is None:
+            raise ValueError(
+                "FedSimConfig.dp_epsilon needs dp_delta — an epsilon "
+                "target is only meaningful at a fixed delta"
+            )
+        if config.dp_delta is not None:
+            from repro.federated.privacy import (GaussianAccountant,
+                                                 commit_sampling_rate)
+
+            noise = float(getattr(self.strategy, "noise_multiplier", 0.0))
+            if noise <= 0.0:
+                raise ValueError(
+                    "DP accounting (dp_delta/dp_epsilon) requires a noised "
+                    "strategy — ClippedDPStrategy with noise_multiplier > 0; "
+                    f"got {type(self.strategy).__name__}"
+                )
+            q = commit_sampling_rate(
+                data.num_clients,
+                num_selected(data.num_clients, config.fraction),
+                buffer_size=getattr(self.strategy, "buffer_size", None),
+            )
+            self._accountant = GaussianAccountant(
+                q=q, noise_multiplier=noise, delta=float(config.dp_delta)
+            )
+
         self._base_key = jax.random.key(config.seed)
         self._perms = all_permutations(config.aggregation.num_criteria())
         self._prio_init = self._perms.index(tuple(config.aggregation.priority))
@@ -500,16 +544,24 @@ class FederatedSimulation:
 
         # Byzantine injection is static: only fleets carrying a corrupt
         # mask trace the attack (honest runs keep their exact programs and
-        # PRNG streams).  The attack rewrites the client's *trained*
-        # pytree before the flat path ravels, so both representations see
-        # bit-identical corruption from one injection point.
+        # PRNG streams).  A *static* attack rewrites the client's trained
+        # pytree inside the vmapped client, before the flat path ravels,
+        # so both representations see bit-identical corruption from one
+        # injection point.  A *colluding* attack needs the corrupt
+        # cohort's pooled update statistics first, so the wave trains
+        # honestly and a second vmapped pass (``collude`` below, still
+        # pre-ravel/pre-quantize semantics) swaps the crafted payloads in.
         corrupt_on = fleet is not None and fleet.corrupt is not None
+        colluding_on = False
         if corrupt_on:
-            from repro.federated.attacks import apply_attack
+            from repro.federated.attacks import (apply_attack,
+                                                 apply_colluding_attack,
+                                                 cohort_stats, is_colluding)
 
             attack_name = fleet.attack
             attack_scale = float(fleet.attack_scale)
-
+            colluding_on = is_colluding(attack_name)
+        if corrupt_on and not colluding_on:
             def one_client(global_params, images, labels, plan,
                            corrupt_k, attack_key):
                 trained = _one_client_honest(global_params, images, labels,
@@ -521,6 +573,27 @@ class FederatedSimulation:
         else:
             one_client = None
             train_axes = (None, 0, 0, 0)
+
+        if colluding_on:
+            def collude(wave, gparams, corrupt_loc, keys_loc, corrupt_full,
+                        psum):
+                """Second injection pass over the honest wave: pool the
+                corrupt rows' deltas into (mu, sigma) — psum-finished
+                under a mesh, with the replicated full-selection count as
+                denominator — then vmap the payload swap with the shared
+                statistics broadcast.  Honest rows pass through
+                bit-identical (the select is on the untouched row)."""
+                delta = jax.tree.map(lambda s, g: s - g[None], wave, gparams)
+                mu, sigma = cohort_stats(delta, corrupt_loc,
+                                         total=jnp.sum(corrupt_full),
+                                         psum=psum)
+
+                def one(trained_k, corrupt_k, key_k):
+                    return apply_colluding_attack(
+                        attack_name, trained_k, gparams, corrupt_k,
+                        attack_scale, key_k, mu, sigma)
+
+                return jax.vmap(one)(wave, corrupt_loc, keys_loc)
 
         def _one_client_honest(global_params, images, labels, plan):
             opt_state = opt.init(global_params)
@@ -545,7 +618,7 @@ class FederatedSimulation:
         ef_on = self._ef_on
         n_flat = fspec.num_params
 
-        if flat and compress is not None:
+        if flat and compress is not None and not colluding_on:
             # Compressed streaming: quantize inside the vmapped client,
             # so local_train's direct output is the int8 wave + its
             # per-block scale sidecar + the client's new error-feedback
@@ -612,13 +685,20 @@ class FederatedSimulation:
             else:
                 sel_t, plans_t = sel, plans
             train_args = (self.images[sel_t], self.labels[sel_t], plans_t)
+            corrupt_t = atk_keys = corrupt_sel = None
             if corrupt_on:
                 # dedicated stream (fold index 4) so hostile runs perturb
                 # no existing randomness; one key per (round, client)
                 atk_keys = jax.random.split(jax.random.fold_in(key, 4), S)
                 if shard is not None:
                     atk_keys = shard.slice_rows(atk_keys)
-                train_args = train_args + (fleet.corrupt[sel_t], atk_keys)
+                corrupt_t = fleet.corrupt[sel_t]
+                if not colluding_on:
+                    train_args = train_args + (corrupt_t, atk_keys)
+                else:
+                    # replicated full-selection mask: the cohort size must
+                    # be identical on every shard (stats denominators)
+                    corrupt_sel = fleet.corrupt[sel]
             if compress is not None:
                 # Error-feedback rows for this wave: a direct [S, N]
                 # gather on one device.  Under a mesh each row lives on
@@ -642,8 +722,26 @@ class FederatedSimulation:
                     ef_wave = shard.psum(
                         jnp.where(owned_ef[:, None], rows, 0.0))
                     ef_sel = shard.slice_rows(ef_wave)
-                q_wave, q_scales, resid = local_train(
-                    model_params, params, ef_sel, *train_args)
+                if colluding_on:
+                    # colluding + compressed: the wave trains honestly
+                    # (flat rows), the collusion pass swaps the crafted
+                    # payloads in, and only then does the wire quantize —
+                    # the attacker corrupts what it uploads, the
+                    # quantizer compresses it like any honest payload
+                    # (same carried = delta + EF ordering as the fused
+                    # per-client path).
+                    wave = local_train(model_params, *train_args)
+                    wave = collude(
+                        wave, params, corrupt_t, atk_keys, corrupt_sel,
+                        shard.psum if shard is not None else None)
+                    carried = (wave - params[None, :]) + ef_sel
+                    q_wave, q_scales = kquant.quantize_blockwise(
+                        carried, compress, qblock)
+                    resid = carried - kquant.dequantize_blockwise(
+                        q_wave, q_scales, qblock)
+                else:
+                    q_wave, q_scales, resid = local_train(
+                        model_params, params, ef_sel, *train_args)
                 # the dequantized reconstruction w_G + deq(q) — what the
                 # server actually "received"; criteria and the nonlinear
                 # strategies consume this, linear commits use the int8
@@ -652,6 +750,11 @@ class FederatedSimulation:
                     q_wave, q_scales, qblock)
             else:
                 stacked = local_train(model_params, *train_args)
+                if colluding_on:
+                    stacked = collude(
+                        stacked, params if flat else model_params,
+                        corrupt_t, atk_keys, corrupt_sel,
+                        shard.psum if shard is not None else None)
 
             if fleet is not None:
                 mask, contrib = participation(fleet, sel, rnd, k_scen)
@@ -812,6 +915,7 @@ class FederatedSimulation:
             (t, f): None for t in targets for f in device_fracs
         }
 
+        budget_exhausted = False
         state = self.init_state()
         if self.cfg.donate:
             # donated dispatches consume the carry's buffers in place —
@@ -840,6 +944,9 @@ class FederatedSimulation:
                         rounds_to[(t, f)] = rnd
             priority = self._perms[int(last["priority_idx"])]
             backtracked = bool(last["backtracked"])
+            commits = int(state.commits)
+            epsilon = (self._accountant.epsilon(commits)
+                       if self._accountant is not None else None)
             metrics.append(RoundMetrics(
                 round=rnd, global_acc=float(global_acc),
                 frac_above=frac_above, priority=priority,
@@ -848,7 +955,8 @@ class FederatedSimulation:
                 weights_entropy=float(last["entropy"]),
                 participants=int(last["participants"]),
                 sim_time=float(state.sim_time),
-                commits=int(state.commits),
+                commits=commits,
+                epsilon_spent=epsilon,
             ))
             if verbose and (rnd % log_every == 0 or rnd >= cfg.max_rounds):
                 print(
@@ -856,6 +964,19 @@ class FederatedSimulation:
                     f"frac>= {targets[0]:.0%}: {frac_above[targets[0]]:.2f} "
                     f"priority={priority} bt={backtracked}"
                 )
+            # enforced privacy budget: stop at the first eval boundary
+            # where the spent epsilon reaches the target (the accountant
+            # is monotone in commits, so no earlier boundary qualified)
+            if (epsilon is not None and cfg.dp_epsilon is not None
+                    and epsilon >= cfg.dp_epsilon):
+                budget_exhausted = True
+                if verbose:
+                    print(
+                        f"[round {rnd:4d}] privacy budget exhausted: "
+                        f"eps={epsilon:.3f} >= {cfg.dp_epsilon} at "
+                        f"delta={cfg.dp_delta} after {commits} commits"
+                    )
+                break
             # early stop when the strictest goal is met
             if all(v is not None for v in rounds_to.values()):
                 break
@@ -863,4 +984,5 @@ class FederatedSimulation:
         self.params = (self._fspec.unravel(state.params) if self._flat
                        else state.params)
         return SimResult(metrics=metrics, final_params=self.params,
-                         rounds_to_target=rounds_to, final_state=state)
+                         rounds_to_target=rounds_to, final_state=state,
+                         budget_exhausted=budget_exhausted)

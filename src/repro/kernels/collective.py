@@ -23,6 +23,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import krum as krum_kernel
 from repro.kernels import ops
 from repro.utils.sharding import ShardSpec
 
@@ -137,3 +138,44 @@ def flat_trimmed_agg_shard(
         return out[:n_feat]
     full = shard.all_gather(stacked_loc)
     return ops.flat_trimmed_agg(full, weights, trim, interpret=interpret)
+
+
+def flat_krum_agg_shard(
+    stacked_loc: jax.Array,
+    weights: jax.Array,
+    f: int,
+    m: int,
+    shard: ShardSpec,
+    interpret: Optional[bool] = None,
+):
+    """Multi-Krum with wave rows sharded over the client axes.
+
+    The ``[S, S]`` Gram matrix splits by *row block*: each shard gathers
+    the full wave once and contributes its ``G_block = X_loc @ X.T``
+    strip — 1/n of the total contraction FLOPs — and an ``all_gather``
+    over the strips (combined-index order == global wave order)
+    assembles the full Gram.  Distances, scores and the ``m``-best
+    selection are then tiny ``[S, S]``/``[S]`` computations replicated
+    bit-identically on every shard (``weights`` is the full replicated
+    vector), so every shard agrees on the selected client set.  The
+    final average stays shard-local: each shard reduces its own rows
+    with its slice of the selection weights and one ``psum`` finishes —
+    the wave never crosses shards twice.
+
+    Returns ``(aggregate [N], scores [S])``, both replicated.
+    """
+    n = shard.num_shards
+    if n == 1:
+        return ops.flat_krum_agg(stacked_loc, weights, f, m,
+                                 interpret=interpret)
+    full = shard.all_gather(stacked_loc).astype(jnp.float32)
+    g_block = stacked_loc.astype(jnp.float32) @ full.T     # [S_loc, S]
+    gram = shard.all_gather(g_block)                       # [S, S]
+    d2 = krum_kernel.gram_sq_dists(gram)
+    scores = krum_kernel.krum_scores(d2, weights, f)
+    wsel, _ = krum_kernel.krum_select(scores, weights, m)
+    part = (shard.slice_rows(wsel)
+            @ stacked_loc.astype(jnp.float32))             # local partial [N]
+    agg = shard.psum(part).astype(stacked_loc.dtype)
+    return agg, scores
+

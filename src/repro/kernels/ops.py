@@ -18,6 +18,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import krum as krum_kernel
 from repro.kernels import ref
 from repro.kernels.divergence import divergence_sq
 from repro.kernels.flash_attention import flash_attention
@@ -155,6 +156,69 @@ def tree_trimmed_agg(stacked: PyTree, weights: jax.Array, trim: int,
         return out.reshape(leaf.shape[1:])
 
     return jax.tree.map(_one, stacked)
+
+
+def flat_krum_agg(
+    stacked: jax.Array,
+    weights: jax.Array,
+    f: int,
+    m: int,
+    interpret: Optional[bool] = None,
+    block_n: int = 2048,
+):
+    """Multi-Krum aggregate ``([N], scores [S])`` on the flat path.
+
+    The distance-based robust reduction: Gram-accumulated pairwise
+    squared distances (one streaming pass over ``[S, N]``, see
+    ``kernels/krum.py``), neighbor-sum scoring, and a renormalized
+    weighted mean over the ``m`` best-scored clients.  The jnp fallback
+    uses the same Gram identity (one BLAS ``X @ X.T``) with scoring and
+    selection shared with the kernel path, so both backends select
+    identical client sets.
+    """
+    use_pallas, interp = resolve_kernel_mode(interpret)
+    if use_pallas:
+        return krum_kernel.krum_agg(stacked, weights, f, m,
+                                    block_n=block_n, interpret=interp)
+    x = stacked.astype(jnp.float32)
+    d2 = krum_kernel.gram_sq_dists(x @ x.T)
+    scores = krum_kernel.krum_scores(d2, weights, f)
+    wsel, _ = krum_kernel.krum_select(scores, weights, m)
+    return (wsel @ x).astype(stacked.dtype), scores
+
+
+def tree_krum_agg(stacked: PyTree, weights: jax.Array, f: int, m: int,
+                  interpret: Optional[bool] = None):
+    """Multi-Krum over a stacked-client pytree.
+
+    Unlike the coordinate-wise reductions, Krum's selection is *global*:
+    per-leaf squared distances are summed into one ``[S, S]`` matrix
+    (exactly the flat path's distances, accumulated leaf by leaf), one
+    score/selection is computed, and every leaf is averaged with the same
+    selection weights — so flat and pytree paths pick the same clients.
+    Tiny leaves (< 1 lane row) contribute via the jnp Gram form directly.
+    """
+    use_pallas, interp = resolve_kernel_mode(interpret)
+    leaves = jax.tree.leaves(stacked)
+    S = leaves[0].shape[0]
+    d2 = jnp.zeros((S, S), jnp.float32)
+    for leaf in leaves:
+        n = int(leaf.size) // S
+        flat = leaf.reshape(S, n)
+        if use_pallas and n >= 128:
+            d2 = d2 + krum_kernel.pairwise_sq_dists(flat, interpret=interp)
+        else:
+            x = flat.astype(jnp.float32)
+            d2 = d2 + krum_kernel.gram_sq_dists(x @ x.T)
+    scores = krum_kernel.krum_scores(d2, weights, f)
+    wsel, _ = krum_kernel.krum_select(scores, weights, m)
+    out = jax.tree.map(
+        lambda leaf: jnp.tensordot(
+            wsel, leaf.astype(jnp.float32), axes=(0, 0)
+        ).astype(leaf.dtype),
+        stacked,
+    )
+    return out, scores
 
 
 def tree_weighted_agg(stacked: PyTree, weights: jax.Array,

@@ -67,6 +67,47 @@ def trimmed_agg_ref(stacked: jax.Array, weights: jax.Array,
     return out.astype(stacked.dtype)
 
 
+def krum_agg_ref(stacked: jax.Array, weights: jax.Array, f: int, m: int):
+    """Multi-Krum reference: explicit pairwise differences, no Gram trick.
+
+    ``stacked``: [S, N] (any float dtype); ``weights``: [S] f32; ``f``:
+    assumed Byzantine bound (``f <= S - 3``); ``m``: selection size
+    (``m = 1`` is plain Krum).
+
+    Per client ``i`` the score sums the squared distances to its
+    ``S - f - 2`` nearest *other* clients (self excluded); zero-weight
+    rows score ``+inf`` (a dropped upload can serve as a neighbor but
+    can never be selected).  The ``m`` lowest-score clients are averaged
+    by their renormalized weights; if the surviving weight mass is ~0
+    the unweighted mean of the selection is used (the engine's
+    all-dropped guard handles the no-participant round above this
+    layer).  ``lax.top_k`` tie-breaks toward lower client indices —
+    the kernel path shares the rule.
+
+    Returns ``(aggregate [N] in stacked's dtype, scores [S] f32)``.
+    """
+    S, _ = stacked.shape
+    if not (f >= 0 and S - f - 2 >= 1):
+        raise ValueError(f"need 0 <= f <= S-3 for S={S}, got f={f}")
+    if not 1 <= m <= S:
+        raise ValueError(f"need 1 <= m <= S={S}, got m={m}")
+    x = stacked.astype(jnp.float32)
+    diff = x[:, None, :] - x[None, :, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    d2 = jnp.where(jnp.eye(S, dtype=bool), jnp.inf, d2)
+    nn = jnp.sort(d2, axis=1)[:, :S - f - 2]
+    w = weights.astype(jnp.float32)
+    scores = jnp.where(w > 0, jnp.sum(nn, axis=1), jnp.inf)
+    _, idx = jax.lax.top_k(-scores, m)
+    sel = jnp.zeros((S,), jnp.float32).at[idx].set(1.0)
+    wk = w * sel
+    den = jnp.sum(wk)
+    num = wk @ x
+    fallback = (sel @ x) / float(m)
+    out = jnp.where(den > 1e-12, num / jnp.maximum(den, 1e-12), fallback)
+    return out.astype(stacked.dtype), scores
+
+
 def attention_ref(
     q: jax.Array,
     k: jax.Array,

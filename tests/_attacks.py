@@ -28,9 +28,14 @@ import numpy as np
 
 from repro.federated.attacks import (  # noqa: F401  (re-exports)
     ATTACKS,
+    COLLUDING,
     apply_attack,
+    apply_colluding_attack,
+    cohort_stats,
     corrupt_fleet,
     get_attack,
+    get_colluding,
+    is_colluding,
 )
 
 

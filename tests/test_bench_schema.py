@@ -83,6 +83,32 @@ class TestCommittedSchema:
             for sname in rob["strategies"]:
                 _check_run_record(rob[f"{preset}/{sname}"])
 
+    def test_robust_adaptive_subtable(self, bench):
+        """The adaptive-adversary rows: colluding preset x every defense
+        with an ``epsilon_spent`` column, finite exactly on the DP row."""
+        ad = bench["robust"]["adaptive"]
+        assert ad["preset"] == "byzantine-colluding"
+        assert sorted(ad["strategies"]) == \
+            ["clipped-dp", "krum", "multi-krum", "trimmed-mean"]
+        assert ad["attack"]["name"] == "colluding-flip"
+        assert 0.0 < ad["attack"]["frac"] < 0.5
+        assert ad["dp"]["noise_multiplier"] > 0
+        assert 0.0 < ad["dp"]["delta"] < 1.0
+        for sname in ad["strategies"]:
+            rec = ad[f"byzantine-colluding/{sname}"]
+            _check_run_record(rec)
+            assert "epsilon_spent" in rec
+            if sname == "clipped-dp":
+                eps = rec["epsilon_spent"]
+                assert eps is not None and np.isfinite(eps) and eps > 0
+            else:
+                assert rec["epsilon_spent"] is None
+        # distance-based selection is the headline: it must beat the
+        # static-attack champion under the colluding payload
+        mk = ad["byzantine-colluding/multi-krum"]["best_acc"]
+        tm = ad["byzantine-colluding/trimmed-mean"]["best_acc"]
+        assert mk > tm
+
     def test_bytes_covers_compression_grid(self, bench):
         by = bench["bytes"]
         assert sorted(by["modes"]) == ["int4", "int8", "none"]
@@ -170,5 +196,10 @@ class TestSmokeHarness:
         for preset in smoke["robust"]["presets"]:
             for sname in smoke["robust"]["strategies"]:
                 _check_run_record(smoke["robust"][f"{preset}/{sname}"])
+        ad = smoke["robust"]["adaptive"]
+        for sname in ad["strategies"]:
+            rec = ad[f"byzantine-colluding/{sname}"]
+            _check_run_record(rec)
+            assert "epsilon_spent" in rec
         # the smoke scale slice still exercises both shard counts
         assert {r["shards"] for r in smoke["scale"]["sweep"]} == {1, 8}

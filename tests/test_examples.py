@@ -58,6 +58,35 @@ class TestFleetExamples:
         for rec in report.values():
             assert 0.0 <= rec["best_acc"] <= 1.0
 
+    def test_scenario_fleet_adaptive_counterpoint(self, tmp_path,
+                                                  monkeypatch, capsys):
+        # --attack colluding --strategy multi-krum swaps the hostile
+        # counterpoint row to the adaptive colluding-flip payload under
+        # distance-based selection (cohort auto-bumped to Krum's >= 3
+        # minimum at this toy scale); --strategy clipped-dp additionally
+        # reports the Rényi (epsilon, delta) budget spent
+        out = tmp_path / "scenarios_mk.json"
+        _run_main("scenario_fleet",
+                  ["--clients", "8", "--rounds", "2", "--hidden", "16",
+                   "--block", "2", "--attack", "colluding",
+                   "--strategy", "multi-krum", "--out", str(out)],
+                  monkeypatch)
+        report = json.loads(out.read_text())
+        assert "byzantine-colluding+multi-krum" in report
+        assert 0.0 <= report["byzantine-colluding+multi-krum"]["best_acc"] \
+            <= 1.0
+
+        out_dp = tmp_path / "scenarios_dp.json"
+        _run_main("scenario_fleet",
+                  ["--clients", "8", "--rounds", "2", "--hidden", "16",
+                   "--block", "2", "--attack", "colluding",
+                   "--strategy", "clipped-dp", "--out", str(out_dp)],
+                  monkeypatch)
+        assert "privacy budget spent" in capsys.readouterr().out
+        rec = json.loads(out_dp.read_text())["byzantine-colluding+clipped-dp"]
+        assert rec["epsilon_spent"] is not None
+        assert rec["epsilon_spent"] > 0
+
     def test_async_fleet_sweeps_strategy_registry(self, tmp_path,
                                                   monkeypatch):
         from repro.federated import STRATEGIES

@@ -38,6 +38,8 @@ from repro.data.synthetic import make_synth_femnist
 from repro.federated import (
     BufferedAsyncStrategy,
     ClippedDPStrategy,
+    KrumStrategy,
+    MultiKrumStrategy,
     ScenarioConfig,
     TrimmedMeanStrategy,
 )
@@ -238,6 +240,12 @@ def _traj(data, params, flat, preset, mode, rounds=4, block=2,
     elif mode == "trimmed":
         kw = dict(aggregation=AggregationConfig(priority=(2, 0, 1)),
                   strategy=TrimmedMeanStrategy(trim=1))
+    elif mode == "krum":
+        kw = dict(aggregation=AggregationConfig(priority=(2, 0, 1)),
+                  strategy=KrumStrategy(f=0))
+    elif mode == "multikrum":
+        kw = dict(aggregation=AggregationConfig(priority=(2, 0, 1)),
+                  strategy=MultiKrumStrategy(f=0))
     elif mode == "clipped":
         kw = dict(
             aggregation=AggregationConfig(
@@ -311,21 +319,32 @@ def test_int8_tracks_uncompressed_within_tolerance(small_data, mlp_params,
     assert max(acc_q) >= max(acc_r) - 0.02
 
 
-@pytest.mark.parametrize("mode", ["trimmed", "clipped"])
-def test_flat_matches_pytree_robust_strategies(small_data, mlp_params, mode):
-    """Both robust strategies pass the equivalence gate on a corrupt
+@pytest.mark.parametrize("preset,mode", [
+    ("byzantine", "trimmed"),
+    ("byzantine", "clipped"),
+    ("byzantine", "krum"),
+    ("byzantine", "multikrum"),
+    ("byzantine-colluding", "trimmed"),
+    ("byzantine-colluding", "multikrum"),
+])
+def test_flat_matches_pytree_robust_strategies(small_data, mlp_params,
+                                               preset, mode):
+    """Every robust strategy passes the equivalence gate on a corrupt
     fleet: the ``byzantine`` preset injects sign-flipped payloads inside
-    the vmapped ``local_train``, so the corruption itself — and the
-    trimmed/clipped commit on top of it — must agree between the flat
-    ``[S, N]`` and per-leaf pytree representations (incl. ClippedDP's
-    Gaussian noise, drawn once flat and sliced per leaf)."""
-    ref = _traj(small_data, mlp_params, False, "byzantine", mode)
-    flat = _traj(small_data, mlp_params, True, "byzantine", mode)
+    the vmapped ``local_train`` and ``byzantine-colluding`` swaps them
+    for the adaptive cohort payload (honest-mean estimate + ALIE shift,
+    jitter drawn once flat and sliced per leaf), so the corruption
+    itself — and the trimmed/clipped/Krum commit on top of it — must
+    agree between the flat ``[S, N]`` and per-leaf pytree
+    representations (incl. ClippedDP's Gaussian noise, same flat-slice
+    trick)."""
+    ref = _traj(small_data, mlp_params, False, preset, mode)
+    flat = _traj(small_data, mlp_params, True, preset, mode)
     for field in ("global_acc", "weights_entropy", "sim_time"):
         np.testing.assert_allclose(
             [getattr(m, field) for m in ref.metrics],
             [getattr(m, field) for m in flat.metrics],
-            rtol=1e-5, atol=1e-6, err_msg=f"byzantine/{mode}/{field}")
+            rtol=1e-5, atol=1e-6, err_msg=f"{preset}/{mode}/{field}")
     for a, b in zip(jax.tree.leaves(ref.final_params),
                     jax.tree.leaves(flat.final_params)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
@@ -387,7 +406,9 @@ def test_donated_carry_survives_repeated_runs(small_data, mlp_params):
 # path, on a forced 8-host-device CPU mesh.  Runs in a subprocess because
 # XLA_FLAGS must be set before jax imports; one process sweeps every
 # {sync, buffered-async, trimmed-mean} x {uniform, tiered-fleet,
-# byzantine} combo and reports per-combo trajectories.
+# byzantine} combo plus the adaptive rows (multi-krum, and the colluding
+# preset whose cohort statistics psum across shards) and reports
+# per-combo trajectories.
 # ----------------------------------------------------------------------
 _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -415,43 +436,50 @@ def cfg_for(mode, preset, mesh, compress):
             criteria=("staleness", "Ds", "Ld", "Md"), priority=(0, 1, 2, 3))
     elif mode == "trimmed-mean":
         kw["strategy"] = make_strategy("trimmed-mean", trim=1)
+    elif mode in ("krum", "multi-krum"):
+        kw["strategy"] = make_strategy(mode, f=1)
     return FedSimConfig(
         fraction=0.5, batch_size=8, local_epochs=1, lr=0.1,
         max_rounds=4, eval_every=2, flat_params=True, compress=compress,
         scenario=ScenarioConfig(preset=preset, seed=1), mesh=mesh, **kw)
 
+COMBOS = [(p, m) for p in ("uniform", "tiered-fleet", "byzantine")
+          for m in ("sync", "buffered-async", "trimmed-mean")]
+COMBOS += [("byzantine", "multi-krum"),
+           ("byzantine-colluding", "sync"),
+           ("byzantine-colluding", "multi-krum")]
+
 assert len(jax.devices()) == 8
 results = {}
-for preset in ("uniform", "tiered-fleet", "byzantine"):
-    for mode in ("sync", "buffered-async", "trimmed-mean"):
-        for compress in ("none", "int8"):
-            runs = []
-            for mesh in (None, make_host_mesh()):
-                sim = FederatedSimulation(
-                    data, params, mlp_loss, mlp_accuracy,
-                    cfg_for(mode, preset, mesh, compress))
-                res = sim.run(targets=(0.99,), device_fracs=(0.99,),
-                              verbose=False)
-                fp = np.concatenate(
-                    [np.ravel(x) for x in jax.tree.leaves(res.final_params)])
-                runs.append((res, fp))
-            (ra, fa), (rb, fb) = runs
-            # none: f32 reduction-order noise only.  int8: the same noise
-            # can flip an isolated quantization bin at a round boundary,
-            # adding ~scale/2 per flipped coordinate — hence the wider,
-            # documented params envelope (observed max <= 8e-5).
-            p_atol = 1e-5 if compress == "none" else 2e-4
-            results[f"{preset}/{mode}/{compress}"] = {
-                "acc": [m.global_acc for m in ra.metrics],
-                "acc_mesh": [m.global_acc for m in rb.metrics],
-                "entropy": [m.weights_entropy for m in ra.metrics],
-                "entropy_mesh": [m.weights_entropy for m in rb.metrics],
-                "sim_time": [m.sim_time for m in ra.metrics],
-                "sim_time_mesh": [m.sim_time for m in rb.metrics],
-                "params_allclose": bool(np.allclose(fb, fa, rtol=1e-4,
-                                                    atol=p_atol)),
-                "params_max_abs": float(np.max(np.abs(fb - fa))),
-            }
+for preset, mode in COMBOS:
+    for compress in ("none", "int8"):
+        runs = []
+        for mesh in (None, make_host_mesh()):
+            sim = FederatedSimulation(
+                data, params, mlp_loss, mlp_accuracy,
+                cfg_for(mode, preset, mesh, compress))
+            res = sim.run(targets=(0.99,), device_fracs=(0.99,),
+                          verbose=False)
+            fp = np.concatenate(
+                [np.ravel(x) for x in jax.tree.leaves(res.final_params)])
+            runs.append((res, fp))
+        (ra, fa), (rb, fb) = runs
+        # none: f32 reduction-order noise only.  int8: the same noise
+        # can flip an isolated quantization bin at a round boundary,
+        # adding ~scale/2 per flipped coordinate — hence the wider,
+        # documented params envelope (observed max <= 8e-5).
+        p_atol = 1e-5 if compress == "none" else 2e-4
+        results[f"{preset}/{mode}/{compress}"] = {
+            "acc": [m.global_acc for m in ra.metrics],
+            "acc_mesh": [m.global_acc for m in rb.metrics],
+            "entropy": [m.weights_entropy for m in ra.metrics],
+            "entropy_mesh": [m.weights_entropy for m in rb.metrics],
+            "sim_time": [m.sim_time for m in ra.metrics],
+            "sim_time_mesh": [m.sim_time for m in rb.metrics],
+            "params_allclose": bool(np.allclose(fb, fa, rtol=1e-4,
+                                                atol=p_atol)),
+            "params_max_abs": float(np.max(np.abs(fb - fa))),
+        }
 print("RESULTS:" + json.dumps(results))
 """
 
@@ -475,10 +503,14 @@ class TestMeshGate:
                 return json.loads(line[len("RESULTS:"):])
         raise AssertionError(f"no RESULTS line in: {proc.stdout[-2000:]}")
 
-    @pytest.mark.parametrize("preset",
-                             ["uniform", "tiered-fleet", "byzantine"])
-    @pytest.mark.parametrize("mode",
-                             ["sync", "buffered-async", "trimmed-mean"])
+    @pytest.mark.parametrize("preset,mode", [
+        (p, m) for p in ["uniform", "tiered-fleet", "byzantine"]
+        for m in ["sync", "buffered-async", "trimmed-mean"]
+    ] + [
+        ("byzantine", "multi-krum"),
+        ("byzantine-colluding", "sync"),
+        ("byzantine-colluding", "multi-krum"),
+    ])
     @pytest.mark.parametrize("compress", ["none", "int8"])
     def test_sharded_matches_single_device(self, gate_results, preset, mode,
                                            compress):

@@ -1,0 +1,148 @@
+"""Property gate for the Rényi-DP accountant in ``repro.federated.privacy``.
+
+The accountant is deliberately host-side (pure ``math``, no jax) so it can
+run at eval boundaries without entering the traced round loop.  This gate
+pins the properties downstream code relies on:
+
+* ``epsilon`` is monotone increasing in the number of commits and in the
+  sampling rate, and monotone decreasing in the noise multiplier,
+* a single full-batch step (``q = 1``) matches the analytic Gaussian
+  bound ``min_alpha alpha/(2 sigma^2) + conversion`` computed directly,
+* the subsampled per-step RDP matches an independent direct-sum
+  evaluation of the integer-order formula,
+* edge cases: zero steps spend nothing, zero sampling spends nothing,
+  zero noise spends everything (``inf``),
+* the module stays jax-free and bit-for-bit deterministic.
+"""
+import math
+
+import pytest
+
+from _propcheck import given, settings, st
+from repro.federated.privacy import (
+    DEFAULT_ORDERS,
+    GaussianAccountant,
+    commit_sampling_rate,
+    epsilon_spent,
+    rdp_subsampled_gaussian,
+    rdp_to_epsilon,
+)
+
+
+def _direct_rdp(q: float, sigma: float, order: int) -> float:
+    """Independent direct-sum evaluation of the integer-order bound
+    (no log-space tricks; fine for the small orders used here)."""
+    total = 0.0
+    for k in range(order + 1):
+        total += (math.comb(order, k) * (q ** k) * ((1 - q) ** (order - k))
+                  * math.exp(k * (k - 1) / (2.0 * sigma ** 2)))
+    return max(0.0, math.log(total) / (order - 1))
+
+
+class TestPerStepRDP:
+    @settings(max_examples=12)
+    @given(st.floats(0.01, 0.9), st.floats(0.6, 4.0), st.integers(2, 32))
+    def test_matches_direct_sum(self, q, sigma, order):
+        got = rdp_subsampled_gaussian(q, sigma, order)
+        want = _direct_rdp(q, sigma, order)
+        assert got == pytest.approx(want, rel=1e-9, abs=1e-12)
+
+    def test_full_batch_closed_form(self):
+        for sigma in (0.5, 1.0, 2.3):
+            for order in (2, 5, 17, 64):
+                got = rdp_subsampled_gaussian(1.0, sigma, order)
+                assert got == pytest.approx(order / (2.0 * sigma ** 2),
+                                            rel=1e-12)
+
+    def test_edge_cases(self):
+        assert rdp_subsampled_gaussian(0.0, 1.0, 8) == 0.0
+        assert math.isinf(rdp_subsampled_gaussian(0.5, 0.0, 8))
+        with pytest.raises(ValueError, match="outside"):
+            rdp_subsampled_gaussian(1.5, 1.0, 8)
+        with pytest.raises(ValueError, match="order"):
+            rdp_subsampled_gaussian(0.5, 1.0, 1)
+
+
+class TestEpsilonProperties:
+    def test_monotone_in_steps(self):
+        acct = GaussianAccountant(q=0.1, noise_multiplier=1.1, delta=1e-5)
+        eps = [acct.epsilon(s) for s in (0, 1, 10, 100, 1000)]
+        assert eps[0] == 0.0
+        for lo, hi in zip(eps, eps[1:]):
+            assert hi > lo
+        assert all(math.isfinite(e) for e in eps)
+
+    @settings(max_examples=8)
+    @given(st.floats(0.7, 3.0), st.integers(1, 200))
+    def test_monotone_in_sampling_rate(self, sigma, steps):
+        qs = (0.01, 0.05, 0.2, 0.5, 1.0)
+        eps = [epsilon_spent(q, sigma, steps, 1e-5) for q in qs]
+        for lo, hi in zip(eps, eps[1:]):
+            assert hi >= lo - 1e-12
+
+    @settings(max_examples=8)
+    @given(st.floats(0.01, 0.5), st.integers(1, 200))
+    def test_monotone_decreasing_in_noise(self, q, steps):
+        sigmas = (0.6, 1.0, 2.0, 4.0, 8.0)
+        eps = [epsilon_spent(q, s, steps, 1e-5) for s in sigmas]
+        for hi, lo in zip(eps, eps[1:]):
+            assert lo <= hi + 1e-12
+
+    def test_single_round_full_batch_matches_analytic_bound(self):
+        """q = 1, one step: the accountant must equal the exact minimum of
+        ``alpha/(2 sigma^2) + conversion`` over the order grid, computed
+        here independently."""
+        sigma, delta = 1.3, 1e-6
+        want = min(
+            a / (2.0 * sigma ** 2) + math.log((a - 1) / a)
+            - (math.log(delta) + math.log(a)) / (a - 1)
+            for a in DEFAULT_ORDERS
+        )
+        got = epsilon_spent(1.0, sigma, 1, delta)
+        assert got == pytest.approx(max(0.0, want), rel=1e-12)
+
+    def test_zero_noise_is_infinite(self):
+        assert math.isinf(epsilon_spent(0.5, 0.0, 3, 1e-5))
+
+    def test_deterministic(self):
+        acct = GaussianAccountant(q=0.25, noise_multiplier=0.9, delta=1e-4)
+        assert acct.epsilon(17) == acct.epsilon(17)
+
+    def test_delta_validation(self):
+        with pytest.raises(ValueError, match="delta"):
+            rdp_to_epsilon(1.0, 8, 0.0)
+        with pytest.raises(ValueError, match="delta"):
+            rdp_to_epsilon(1.0, 8, 1.0)
+        with pytest.raises(ValueError, match="steps"):
+            epsilon_spent(0.5, 1.0, -1, 1e-5)
+
+
+class TestCommitSamplingRate:
+    def test_sync_uses_round_cohort(self):
+        assert commit_sampling_rate(100, 10) == pytest.approx(0.1)
+        assert commit_sampling_rate(8, 16) == 1.0          # clamped
+
+    def test_buffered_async_uses_buffer(self):
+        assert commit_sampling_rate(100, 10, buffer_size=4) == (
+            pytest.approx(0.04))
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="num_clients"):
+            commit_sampling_rate(0, 4)
+        with pytest.raises(ValueError, match="cohort"):
+            commit_sampling_rate(10, 0)
+
+
+class TestHygiene:
+    def test_module_never_imports_jax(self):
+        """The accountant runs host-side at eval boundaries; importing jax
+        there would invite accidental tracing.  Pin it at the source."""
+        import inspect
+        import re
+
+        import repro.federated.privacy as privacy
+
+        src = inspect.getsource(privacy)
+        bad = re.findall(r"^\s*(?:import|from)\s+(jax|numpy)", src,
+                         re.MULTILINE)
+        assert not bad, f"privacy.py imports {bad}; stdlib math only"
