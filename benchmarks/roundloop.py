@@ -316,13 +316,17 @@ def _adaptive_cfg(sname: str, rounds: int, block: int,
             aggregation=AggregationConfig(priority=(2, 0, 1)),
             strategy=make_strategy(sname), **common)
     if sname == "clipped-dp":
+        # uniform_weights is a hard requirement of accounting: the
+        # accountant's sensitivity bound only covers the uniform mean
+        # over contributors (criteria-derived weights would leak)
         return FedSimConfig(
             aggregation=AggregationConfig(
                 criteria=("Ds", "Ld", "Md", "update_norm"),
                 priority=(3, 2, 0, 1)),
             strategy=make_strategy(
                 "clipped-dp", clip_norm=ADAPTIVE_DP["clip_norm"],
-                noise_multiplier=ADAPTIVE_DP["noise_multiplier"]),
+                noise_multiplier=ADAPTIVE_DP["noise_multiplier"],
+                uniform_weights=True),
             dp_delta=ADAPTIVE_DP["delta"],
             **common)
     raise KeyError(sname)

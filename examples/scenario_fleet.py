@@ -103,8 +103,11 @@ def main() -> None:
             row["strategy"] = make_strategy(args.strategy)
             row["fraction"] = min(args.clients, max(3, cohort)) / args.clients
         else:  # clipped-dp: clip + noise, the Rényi accountant metering
+            # (accounting requires the DP-safe uniform mean + uniform
+            # selection; criteria still feed the update_norm telemetry)
             row["strategy"] = make_strategy("clipped-dp", clip_norm=1.0,
-                                            noise_multiplier=0.5)
+                                            noise_multiplier=0.5,
+                                            uniform_weights=True)
             row["aggregation"] = AggregationConfig(
                 criteria=("Ds", "Ld", "Md", "update_norm"),
                 priority=(3, 2, 0, 1))

@@ -678,7 +678,10 @@ class KrumStrategy(AggregationStrategy):
     multi-criteria weights, so device-awareness composes with the
     defense exactly as it does for the trimmed mean.  Dropped uploads
     (zero contribution) score ``+inf`` and are never selected, but their
-    honest-trained vectors still serve as neighbors.  The pairwise
+    honest-trained vectors still serve as neighbors; a fully starved
+    selection aggregates to the zero vector by the kernel's guard
+    contract, and this strategy's alive guard (``sum(contrib) > 0``)
+    keeps the previous params in that case.  The pairwise
     distances run as one Gram-accumulating streaming pass on the flat
     path (``kernels/krum.py``), as summed per-leaf distances feeding a
     single shared selection on the pytree path, and as shard-local
@@ -768,11 +771,25 @@ class ClippedDPStrategy(AggregationStrategy):
         sigma = noise_multiplier * clip_norm / max(n_participants, 1)
 
     — the standard calibration for a mean of ``n`` contributions each of
-    sensitivity ``clip_norm / n`` (McMahan et al., 2018).  With
-    ``noise_multiplier = 0`` this is pure robust clipping: the commit's
-    step is norm-bounded by ``clip_norm`` regardless of what any client
-    sends, which already defuses magnitude attacks (scaled/sign-flip
-    payloads get truncated to the same length as honest updates).
+    sensitivity ``clip_norm / n`` (McMahan et al., 2018), where ``n``
+    counts the clients that actually contributed this round (the same
+    set the weights normalize over).  With ``noise_multiplier = 0`` this
+    is pure robust clipping: the commit's step is norm-bounded by
+    ``clip_norm`` regardless of what any client sends, which already
+    defuses magnitude attacks (scaled/sign-flip payloads get truncated
+    to the same length as honest updates).
+
+    ``uniform_weights=True`` replaces the prioritized criteria weights
+    with the uniform mean over contributors (``p_k = 1 / n``).  This is
+    the *DP-safe* mode and a precondition of accounting
+    (``FedSimConfig(dp_delta=...)`` refuses a non-uniform strategy): the
+    criteria weights are computed from un-noised client statistics such
+    as ``update_norm``, so a weighted commit both gives some client a
+    coefficient ``p_k > 1 / n`` (sensitivity above what the accountant
+    charges) and leaks client data through the weights themselves.  The
+    reported weights entropy is likewise the uniform one in this mode —
+    metrics are released alongside the model and must not carry the
+    un-noised criteria either.
 
     Noise is deterministic per ``(noise_seed, round)`` — drawn from
     ``fold_in(key(noise_seed), rnd)`` as one flat ``[N]`` vector that the
@@ -788,14 +805,20 @@ class ClippedDPStrategy(AggregationStrategy):
     clip_norm: float = 1.0
     noise_multiplier: float = 0.0
     noise_seed: int = 0
+    uniform_weights: bool = False
 
     requires = ("update_norm",)
     supports_online_adjust = False
 
     def step(self, state, inp, cfg, online_adjust, eval_fn):
         params = state.params
-        p = compute_weights(inp.criteria, cfg, tuple(cfg.priority),
-                            mask=inp.contrib)
+        contributors = (inp.contrib > 0).astype(jnp.float32)
+        n_contrib = jnp.sum(contributors)
+        if self.uniform_weights:
+            p = contributors / jnp.maximum(n_contrib, 1.0)
+        else:
+            p = compute_weights(inp.criteria, cfg, tuple(cfg.priority),
+                                mask=inp.contrib)
         if inp.shard is not None:
             num_params = int(inp.stacked.shape[1])
             sq = kcoll.flat_divergence_sq_shard(inp.stacked, params,
@@ -831,9 +854,10 @@ class ClippedDPStrategy(AggregationStrategy):
                 inp.stacked, params,
             )
         if self.noise_multiplier > 0.0:
-            n_part = jnp.sum(inp.mask)
+            # calibrate against the contributing count — the denominator
+            # of the committed mean — not the raw participation mask
             sigma = self.noise_multiplier * self.clip_norm \
-                / jnp.maximum(n_part, 1.0)
+                / jnp.maximum(n_contrib, 1.0)
             nkey = jax.random.fold_in(
                 jax.random.key(self.noise_seed), inp.rnd
             )

@@ -1,31 +1,56 @@
 """Rényi-DP (moments) accountant for the subsampled Gaussian mechanism.
 
-``ClippedDPStrategy`` clips every client update to ``clip_norm`` and adds
-``N(0, (noise_multiplier * clip_norm / n)^2)`` to the committed mean —
-the Gaussian mechanism with sensitivity ``clip_norm / n`` and noise
-standard deviation ``noise_multiplier`` *in sensitivity units*.  Each
-commit touches a uniformly-sampled cohort (``q = S / K`` for sync-style
-strategies, ``q = buffer_size / K`` per buffered-async commit), so the
-per-commit privacy cost is that of the *subsampled* Gaussian mechanism,
-and the run's total cost composes across commits.
+``ClippedDPStrategy(uniform_weights=True)`` clips every client update to
+``clip_norm``, commits their *uniform* mean, and adds
+``N(0, (noise_multiplier * clip_norm / n)^2)`` to it — the Gaussian
+mechanism whose noise standard deviation is ``noise_multiplier`` in
+remove-one-sensitivity (``clip_norm / n``) units.  Uniform weights are a
+precondition of everything below: the prioritized criteria weights are
+computed from un-noised client statistics, so a weighted commit both has
+per-client sensitivity ``p_k * clip_norm > clip_norm / n`` and leaks
+through the weights themselves — ``FederatedSimulation`` refuses to
+construct an accountant for a non-uniform strategy.
 
-This module is the accounting side of that story, deliberately kept
-host-side: stdlib ``math`` only, no jax (pinned by
-``tests/test_privacy.py``), evaluated at eval boundaries in
+Each commit touches a fixed-size cohort drawn uniformly *without
+replacement* (``sampler.py``'s truncated permutation; ``q = S / K`` for
+sync-style strategies, ``q = buffer_size / K`` per buffered-async
+commit).  That is NOT Poisson subsampling, so the default accounting
+scheme is the fixed-size-WOR amplification bound (Wang, Balle &
+Kasiviswanathan 2019) under *replace-one* adjacency — the natural
+neighboring relation for fixed-size draws, whose sensitivity is
+``2 clip_norm / n`` (one contribution swapped), i.e. an effective noise
+multiplier of ``noise_multiplier / 2``.  The Poisson bound is still
+exposed (``scheme="poisson"``) for schedules that genuinely Poisson-
+sample.  Amplification additionally assumes the cohort draw is uniform:
+the engine rejects accounting under weighted selection policies.
+
+This module is deliberately host-side: stdlib ``math`` only, no jax
+(pinned by ``tests/test_privacy.py``), evaluated at eval boundaries in
 ``FederatedSimulation.run`` — never traced, never jitted, bit-for-bit
 deterministic.
 
 The machinery is the standard Rényi-DP accountant (Mironov 2017; Abadi
 et al. 2016's moments accountant is the same object up to a change of
-variables; subsampled amplification per Mironov-Talwar-Zhang 2019):
+variables):
 
-1. per-commit Rényi divergence bound at integer orders ``alpha``:
+1. per-commit Rényi divergence bound at integer orders ``alpha`` —
+   Poisson (Mironov-Talwar-Zhang 2019):
 
    ``RDP(alpha) = log( sum_{k=0}^{alpha} C(alpha, k) (1-q)^(alpha-k) q^k
                        exp(k (k-1) / (2 sigma^2)) ) / (alpha - 1)``
 
-   (for ``q = 1`` this collapses to the plain Gaussian bound
-   ``alpha / (2 sigma^2)``);
+   or fixed-size WOR (Wang et al. 2019, Theorem 9 specialized to the
+   Gaussian mechanism, where ``eps(j) = j / (2 sigma^2)``):
+
+   ``RDP(alpha) = log( 1
+       + C(alpha, 2) q^2 min(4 (e^{eps(2)} - 1), 2 e^{eps(2)})
+       + sum_{j=3}^{alpha} C(alpha, j) q^j 2 e^{(j-1) eps(j)}
+     ) / (alpha - 1)``
+
+   (for ``q = 1`` both collapse to the plain Gaussian bound
+   ``alpha / (2 sigma^2)``, and the WOR bound is additionally clamped by
+   it — valid because Rényi divergence is jointly quasi-convex over the
+   coupled subsample mixture);
 2. linear composition: ``RDP_total(alpha) = steps * RDP(alpha)``;
 3. conversion to ``(epsilon, delta)`` with the improved bound
    (Canonne-Kairouz-Steinke 2020):
@@ -91,6 +116,59 @@ def rdp_subsampled_gaussian(q: float, noise_multiplier: float,
     return max(0.0, _logsumexp(terms) / (order - 1))
 
 
+def _log_expm1(x: float) -> float:
+    """``log(exp(x) - 1)`` without overflow for large ``x``."""
+    if x <= 0.0:
+        raise ValueError(f"need x > 0, got {x}")
+    if x > 690.0:                       # exp(x) overflows; e^x - 1 ~ e^x
+        return x
+    return math.log(math.expm1(x))
+
+
+def rdp_wor_gaussian(q: float, sigma: float, order: int) -> float:
+    """Per-step RDP of the *fixed-size without-replacement* subsampled
+    Gaussian at integer ``order`` (Wang-Balle-Kasiviswanathan 2019).
+
+    ``q`` is the cohort fraction (``S / K``); ``sigma`` the noise
+    standard deviation in units of the base mechanism's sensitivity
+    under **replace-one** adjacency — for a clipped mean of ``n``
+    contributions with noise ``noise_multiplier * clip_norm / n``, the
+    replace-one sensitivity is ``2 clip_norm / n``, so callers pass
+    ``sigma = noise_multiplier / 2`` (``GaussianAccountant`` does this).
+
+    The bound is clamped by the unamplified Gaussian bound
+    ``order / (2 sigma^2)`` (valid by joint quasi-convexity of the
+    Rényi divergence over the coupled subsample mixture) and floored at
+    0.  Returns ``+inf`` for a noiseless mechanism and ``0`` for an
+    empty one (``q = 0``).
+    """
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"sampling rate {q} outside [0, 1]")
+    if order < 2 or int(order) != order:
+        raise ValueError(f"integer order >= 2 required, got {order}")
+    if q == 0.0:
+        return 0.0
+    if sigma <= 0.0:
+        return math.inf
+    sigma2 = float(sigma) ** 2
+    full = order / (2.0 * sigma2)
+    if q == 1.0:
+        return full
+    order = int(order)
+    log_q = math.log(q)
+    eps2 = 2.0 / (2.0 * sigma2)         # eps(2) = 2 / (2 sigma^2)
+    log_j2 = min(math.log(4.0) + _log_expm1(eps2),
+                 math.log(2.0) + eps2)
+    terms = [0.0,                       # j = 0 term: 1
+             _log_binom(order, 2) + 2.0 * log_q + log_j2]
+    for j in range(3, order + 1):
+        eps_j = j / (2.0 * sigma2)
+        terms.append(_log_binom(order, j) + j * log_q + math.log(2.0)
+                     + (j - 1) * eps_j)
+    bound = _logsumexp(terms) / (order - 1)
+    return max(0.0, min(bound, full))
+
+
 def rdp_to_epsilon(rdp: float, order: int, delta: float) -> float:
     """Improved RDP -> (epsilon, delta) conversion at one order."""
     if not 0.0 < delta < 1.0:
@@ -109,12 +187,13 @@ def epsilon_spent(
     delta: float,
     orders: Sequence[int] = DEFAULT_ORDERS,
 ) -> float:
-    """Total ``epsilon`` after ``steps`` subsampled-Gaussian commits.
+    """Total ``epsilon`` after ``steps`` *Poisson*-subsampled commits.
 
     Composes the per-step RDP linearly across ``steps`` commits at every
     order in the grid, converts each to an ``(epsilon, delta)`` pair and
     returns the minimum — the accountant's bound on the run so far.
-    ``steps = 0`` spends nothing.
+    ``steps = 0`` spends nothing.  The engine's fixed-size-WOR schedule
+    goes through :class:`GaussianAccountant` (``scheme="wor"``) instead.
     """
     if steps < 0:
         raise ValueError(f"steps must be >= 0, got {steps}")
@@ -153,14 +232,76 @@ class GaussianAccountant:
     every surviving round with ``q = S / K``; buffered-async commits a
     ``buffer_size``-client buffer with ``q = buffer_size / K``), so the
     spent budget is a pure function of the commit count.
+
+    ``noise_multiplier`` is in the engine's calibration units (noise
+    standard deviation over ``clip_norm / n``, the remove-one sensitivity
+    of the uniform mean).  ``scheme`` picks the amplification bound:
+
+    * ``"wor"`` (default) — fixed-size uniform without-replacement
+      cohorts under replace-one adjacency (Wang et al. 2019), matching
+      ``sampler.py``'s truncated-permutation draw; the replace-one
+      sensitivity is twice remove-one, so the bound runs at an effective
+      noise multiplier of ``noise_multiplier / 2``.
+    * ``"poisson"`` — the classic Poisson-subsampling bound, only sound
+      if each client independently joins each commit with probability
+      ``q`` (the engine does not sample this way; exposed for external
+      schedules that do).
     """
 
     q: float
     noise_multiplier: float
     delta: float
     orders: Tuple[int, ...] = DEFAULT_ORDERS
+    scheme: str = "wor"
+
+    def __post_init__(self):
+        if self.scheme not in ("wor", "poisson"):
+            raise ValueError(
+                f"scheme must be 'wor' or 'poisson', got {self.scheme!r}")
+
+    def _per_step_rdp(self, order: int) -> float:
+        if self.scheme == "wor":
+            return rdp_wor_gaussian(self.q, self.noise_multiplier / 2.0,
+                                    order)
+        return rdp_subsampled_gaussian(self.q, self.noise_multiplier, order)
 
     def epsilon(self, steps: int) -> float:
         """``epsilon`` spent after ``steps`` commits (monotone in steps)."""
-        return epsilon_spent(self.q, self.noise_multiplier, int(steps),
-                             self.delta, self.orders)
+        steps = int(steps)
+        if steps < 0:
+            raise ValueError(f"steps must be >= 0, got {steps}")
+        if steps == 0:
+            return 0.0
+        return min(
+            rdp_to_epsilon(steps * self._per_step_rdp(a), a, self.delta)
+            for a in self.orders
+        )
+
+    def max_commits(self, epsilon_target: float) -> int:
+        """Largest commit count whose spent budget stays *strictly below*
+        ``epsilon_target`` (0 if even one commit busts the budget).
+
+        ``epsilon`` is a pure monotone function of the commit count, so
+        the engine can cap a scan block at ``max_commits - commits`` and
+        stop *before* the budget is exceeded instead of after — noised
+        state past the target is never committed.  Doubling search plus
+        bisection; the per-order RDP is strictly positive for a noised
+        mechanism, so the search terminates.
+        """
+        if not epsilon_target > 0.0:
+            raise ValueError(
+                f"epsilon target must be > 0, got {epsilon_target}")
+        if self.epsilon(1) >= epsilon_target:
+            return 0
+        lo, hi = 1, 2
+        while self.epsilon(hi) < epsilon_target:
+            lo, hi = hi, hi * 2
+            if hi > 1 << 62:            # unreachable for noise > 0
+                return lo
+        while hi - lo > 1:
+            mid = (lo + hi) // 2
+            if self.epsilon(mid) < epsilon_target:
+                lo = mid
+            else:
+                hi = mid
+        return lo

@@ -148,12 +148,20 @@ class FedSimConfig:
     ``dp_delta``/``dp_epsilon`` turn the :class:`ClippedDPStrategy` noise
     knob into a real privacy budget: with ``dp_delta`` set (and a noised
     clipped-DP strategy configured) every eval point reports the spent
-    ``(epsilon, dp_delta)`` of the run so far — subsampled-Gaussian RDP
-    composed over the commits actually made, for both the sync and the
-    buffered-async commit schedules (``federated.privacy``).  Setting
-    ``dp_epsilon`` additionally makes the budget *enforced*: the run
-    halts at the first eval boundary where the spent ``epsilon`` reaches
-    the target and the result is flagged ``budget_exhausted``.
+    ``(epsilon, dp_delta)`` of the run so far — fixed-size-WOR
+    subsampled-Gaussian RDP composed over the commits actually made, for
+    both the sync and the buffered-async commit schedules
+    (``federated.privacy``).  Accounting demands a DP-safe
+    configuration: ``ClippedDPStrategy(uniform_weights=True)`` (the
+    uniform mean over contributors — criteria-derived weights break the
+    sensitivity bound and leak) and uniform client selection (the
+    amplification theorem does not cover weighted policies); anything
+    else raises at construction.  Setting ``dp_epsilon`` additionally
+    makes the budget *enforced*: the affordable commit count is
+    precomputed from the monotone accountant, each scan block is capped
+    at the commits still affordable, and the run stops — flagged
+    ``budget_exhausted`` — *before* a commit would spend past the
+    target, so the final model never contains over-budget noised state.
 
     ``compress`` turns on compressed update streaming (flat path only):
     each client's flat update is quantized to int8/int4 with per-block
@@ -272,6 +280,7 @@ class FederatedSimulation:
         # (one commit per surviving round over the round cohort), or
         # buffer_size / K for strategies that commit a client buffer.
         self._accountant = None
+        self._dp_max_commits: Optional[int] = None
         if config.dp_epsilon is not None and config.dp_delta is None:
             raise ValueError(
                 "FedSimConfig.dp_epsilon needs dp_delta — an epsilon "
@@ -288,14 +297,44 @@ class FederatedSimulation:
                     "strategy — ClippedDPStrategy with noise_multiplier > 0; "
                     f"got {type(self.strategy).__name__}"
                 )
+            # the accountant charges the sensitivity of the *uniform* mean
+            # over contributors; prioritized criteria weights give some
+            # client p_k > 1/n and are themselves computed from un-noised
+            # client statistics, so a weighted commit voids the bound
+            if not getattr(self.strategy, "uniform_weights", False):
+                raise ValueError(
+                    "DP accounting (dp_delta/dp_epsilon) requires "
+                    "ClippedDPStrategy(uniform_weights=True): criteria-"
+                    "derived aggregation weights are data-dependent and "
+                    "unprotected, so the accountant's sensitivity "
+                    "assumption (clip_norm / n per client) does not hold "
+                    "for a weighted commit"
+                )
+            # amplification-by-subsampling assumes the cohort is a uniform
+            # draw; capability/availability-weighted policies have non-
+            # uniform, state-dependent inclusion probabilities the WOR
+            # bound does not cover
+            if type(self.policy) is not UniformPolicy:
+                raise ValueError(
+                    "DP accounting (dp_delta/dp_epsilon) requires uniform "
+                    "client selection (FedSimConfig.selection=None or "
+                    f"UniformPolicy); got {type(self.policy).__name__}"
+                )
             q = commit_sampling_rate(
                 data.num_clients,
                 num_selected(data.num_clients, config.fraction),
                 buffer_size=getattr(self.strategy, "buffer_size", None),
             )
+            # scheme="wor" (the default): the engine's cohorts are fixed-
+            # size without-replacement draws, not Poisson samples
             self._accountant = GaussianAccountant(
                 q=q, noise_multiplier=noise, delta=float(config.dp_delta)
             )
+            if config.dp_epsilon is not None:
+                # pure monotone function of the commit count, so the
+                # affordable commit budget is known before the run starts
+                self._dp_max_commits = self._accountant.max_commits(
+                    float(config.dp_epsilon))
 
         self._base_key = jax.random.key(config.seed)
         self._perms = all_permutations(config.aggregation.num_criteria())
@@ -926,6 +965,24 @@ class FederatedSimulation:
         rnd = 0
         while rnd < cfg.max_rounds:
             n = min(block, cfg.max_rounds - rnd)
+            if self._dp_max_commits is not None:
+                # enforce the budget *before* running: each round commits
+                # at most once, so capping the block at the remaining
+                # affordable commits guarantees the spent epsilon stays
+                # below dp_epsilon — over-budget noised state is never
+                # committed, not rolled back after the fact
+                remaining = self._dp_max_commits - int(state.commits)
+                if remaining <= 0:
+                    budget_exhausted = True
+                    if verbose:
+                        print(
+                            f"[round {rnd:4d}] privacy budget exhausted: "
+                            f"one more commit would spend past "
+                            f"eps={cfg.dp_epsilon} at delta={cfg.dp_delta} "
+                            f"({int(state.commits)} commits)"
+                        )
+                    break
+                n = min(n, remaining)
             round_ids = jnp.arange(rnd + 1, rnd + n + 1, dtype=jnp.int32)
             if cfg.use_scan:
                 state, ys, accs, global_acc = self._run_block(state, round_ids)
@@ -964,9 +1021,10 @@ class FederatedSimulation:
                     f"frac>= {targets[0]:.0%}: {frac_above[targets[0]]:.2f} "
                     f"priority={priority} bt={backtracked}"
                 )
-            # enforced privacy budget: stop at the first eval boundary
-            # where the spent epsilon reaches the target (the accountant
-            # is monotone in commits, so no earlier boundary qualified)
+            # backstop only: the pre-run commit cap above keeps the spent
+            # epsilon strictly below the target, so this cannot fire for
+            # the capped schedules; it guards any future commit schedule
+            # that beats the one-commit-per-round bound
             if (epsilon is not None and cfg.dp_epsilon is not None
                     and epsilon >= cfg.dp_epsilon):
                 budget_exhausted = True

@@ -162,7 +162,9 @@ def flat_krum_agg_shard(
     with its slice of the selection weights and one ``psum`` finishes —
     the wave never crosses shards twice.
 
-    Returns ``(aggregate [N], scores [S])``, both replicated.
+    Returns ``(aggregate [N], scores [S])``, both replicated.  Shares
+    ``ops.flat_krum_agg``'s guard contract: a starved round aggregates
+    to the zero vector and must be no-opped by the caller.
     """
     n = shard.num_shards
     if n == 1:

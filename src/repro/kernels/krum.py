@@ -117,8 +117,12 @@ def krum_select(scores: jax.Array, weights: jax.Array, m: int):
 
     ``lax.top_k`` tie-breaks toward lower client indices, matching the
     oracle.  If the selected rows carry no weight mass (every pick was a
-    zero-weight straggler in a starved round) the unweighted mean of the
-    selection is used — the engine's all-dropped guard sits above this.
+    zero-weight straggler in a starved round) the weights are all zero —
+    the aggregate built from them is the zero vector, never an average of
+    dropped clients' updates.  Callers must treat a starved round as a
+    no-op: the engine's all-dropped guard (``sum(contrib) > 0``) keeps
+    the previous params in exactly this case, and any future caller of
+    ``flat_krum_agg``/``tree_krum_agg`` owes the same guard.
     """
     S = scores.shape[0]
     if not 1 <= m <= S:
@@ -128,7 +132,7 @@ def krum_select(scores: jax.Array, weights: jax.Array, m: int):
     wk = weights.astype(jnp.float32) * sel
     den = jnp.sum(wk)
     return jnp.where(den > 1e-12, wk / jnp.maximum(den, 1e-12),
-                     sel / float(m)), sel
+                     jnp.zeros_like(wk)), sel
 
 
 @functools.partial(jax.jit,

@@ -175,6 +175,11 @@ def flat_krum_agg(
     uses the same Gram identity (one BLAS ``X @ X.T``) with scoring and
     selection shared with the kernel path, so both backends select
     identical client sets.
+
+    Guard contract: a starved round (every selected row has zero
+    weight) aggregates to the zero vector — the caller must gate the
+    commit on some participant having contributed (the engine's
+    ``sum(contrib) > 0`` alive guard) rather than commit the result.
     """
     use_pallas, interp = resolve_kernel_mode(interpret)
     if use_pallas:
@@ -197,6 +202,8 @@ def tree_krum_agg(stacked: PyTree, weights: jax.Array, f: int, m: int,
     score/selection is computed, and every leaf is averaged with the same
     selection weights — so flat and pytree paths pick the same clients.
     Tiny leaves (< 1 lane row) contribute via the jnp Gram form directly.
+    Shares :func:`flat_krum_agg`'s guard contract: starved rounds
+    aggregate to zero and must be no-opped by the caller.
     """
     use_pallas, interp = resolve_kernel_mode(interpret)
     leaves = jax.tree.leaves(stacked)

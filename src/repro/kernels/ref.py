@@ -79,10 +79,11 @@ def krum_agg_ref(stacked: jax.Array, weights: jax.Array, f: int, m: int):
     rows score ``+inf`` (a dropped upload can serve as a neighbor but
     can never be selected).  The ``m`` lowest-score clients are averaged
     by their renormalized weights; if the surviving weight mass is ~0
-    the unweighted mean of the selection is used (the engine's
-    all-dropped guard handles the no-participant round above this
-    layer).  ``lax.top_k`` tie-breaks toward lower client indices —
-    the kernel path shares the rule.
+    (a starved round where every pick was a dropped upload) the
+    aggregate is the zero vector — never an average of dropped clients'
+    updates — and the caller must no-op the round (the engine's
+    all-dropped guard does).  ``lax.top_k`` tie-breaks toward lower
+    client indices — the kernel path shares the rule.
 
     Returns ``(aggregate [N] in stacked's dtype, scores [S] f32)``.
     """
@@ -103,8 +104,8 @@ def krum_agg_ref(stacked: jax.Array, weights: jax.Array, f: int, m: int):
     wk = w * sel
     den = jnp.sum(wk)
     num = wk @ x
-    fallback = (sel @ x) / float(m)
-    out = jnp.where(den > 1e-12, num / jnp.maximum(den, 1e-12), fallback)
+    out = jnp.where(den > 1e-12, num / jnp.maximum(den, 1e-12),
+                    jnp.zeros_like(num))
     return out.astype(stacked.dtype), scores
 
 

@@ -26,6 +26,7 @@ from repro.federated.privacy import (
     epsilon_spent,
     rdp_subsampled_gaussian,
     rdp_to_epsilon,
+    rdp_wor_gaussian,
 )
 
 
@@ -61,6 +62,123 @@ class TestPerStepRDP:
             rdp_subsampled_gaussian(1.5, 1.0, 8)
         with pytest.raises(ValueError, match="order"):
             rdp_subsampled_gaussian(0.5, 1.0, 1)
+
+
+def _direct_wor_rdp(q: float, sigma: float, order: int) -> float:
+    """Independent direct-sum evaluation of the fixed-size-WOR bound
+    (Wang et al. 2019, Thm 9 for the Gaussian; no log-space tricks)."""
+    eps = lambda j: j / (2.0 * sigma ** 2)  # noqa: E731
+    total = 1.0 + math.comb(order, 2) * q ** 2 * min(
+        4.0 * (math.exp(eps(2)) - 1.0), 2.0 * math.exp(eps(2)))
+    for j in range(3, order + 1):
+        total += (math.comb(order, j) * q ** j * 2.0
+                  * math.exp((j - 1) * eps(j)))
+    bound = math.log(total) / (order - 1)
+    return max(0.0, min(bound, order / (2.0 * sigma ** 2)))
+
+
+class TestWORPerStepRDP:
+    """The engine's cohorts are fixed-size without-replacement draws, so
+    the accountant uses the Wang et al. 2019 WOR amplification bound
+    under replace-one adjacency — not the Poisson theorem."""
+
+    @settings(max_examples=12)
+    @given(st.floats(0.01, 0.9), st.floats(0.8, 4.0), st.integers(2, 24))
+    def test_matches_direct_sum(self, q, sigma, order):
+        got = rdp_wor_gaussian(q, sigma, order)
+        want = _direct_wor_rdp(q, sigma, order)
+        assert got == pytest.approx(want, rel=1e-9, abs=1e-12)
+
+    def test_full_batch_closed_form(self):
+        """q = 1 is the unamplified Gaussian bound in the given
+        sensitivity units."""
+        for sigma in (0.5, 1.0, 2.3):
+            for order in (2, 5, 17, 64):
+                got = rdp_wor_gaussian(1.0, sigma, order)
+                assert got == pytest.approx(order / (2.0 * sigma ** 2),
+                                            rel=1e-12)
+
+    def test_clamped_by_unamplified_bound(self):
+        """Subsampling never makes the mechanism less private than the
+        full-batch release (joint quasi-convexity clamp)."""
+        for q in (0.05, 0.3, 0.9, 0.999):
+            for sigma in (0.4, 1.0, 3.0):
+                for order in (2, 8, 64):
+                    assert rdp_wor_gaussian(q, sigma, order) <= \
+                        order / (2.0 * sigma ** 2) + 1e-12
+
+    @settings(max_examples=8)
+    @given(st.floats(0.8, 3.0), st.integers(2, 32))
+    def test_monotone_in_sampling_rate(self, sigma, order):
+        qs = (0.01, 0.05, 0.2, 0.5, 1.0)
+        rdp = [rdp_wor_gaussian(q, sigma, order) for q in qs]
+        for lo, hi in zip(rdp, rdp[1:]):
+            assert hi >= lo - 1e-12
+
+    def test_edge_cases(self):
+        assert rdp_wor_gaussian(0.0, 1.0, 8) == 0.0
+        assert math.isinf(rdp_wor_gaussian(0.5, 0.0, 8))
+        assert rdp_wor_gaussian(0.2, 1.0, 8) >= 0.0
+        with pytest.raises(ValueError, match="outside"):
+            rdp_wor_gaussian(1.5, 1.0, 8)
+        with pytest.raises(ValueError, match="order"):
+            rdp_wor_gaussian(0.5, 1.0, 1)
+
+
+class TestAccountantScheme:
+    def test_default_scheme_is_wor(self):
+        acct = GaussianAccountant(q=0.25, noise_multiplier=1.0, delta=1e-5)
+        assert acct.scheme == "wor"
+
+    def test_wor_accounts_replace_one_sensitivity(self):
+        """The engine calibrates noise in remove-one units
+        (``clip_norm / n``); replace-one sensitivity is twice that, so
+        the WOR accountant runs at an effective noise multiplier of
+        ``noise_multiplier / 2`` — pinned against the closed form at
+        q = 1."""
+        sigma, delta = 2.0, 1e-6
+        acct = GaussianAccountant(q=1.0, noise_multiplier=sigma, delta=delta)
+        want = min(
+            a / (2.0 * (sigma / 2.0) ** 2) + math.log((a - 1) / a)
+            - (math.log(delta) + math.log(a)) / (a - 1)
+            for a in DEFAULT_ORDERS
+        )
+        assert acct.epsilon(1) == pytest.approx(max(0.0, want), rel=1e-12)
+
+    def test_poisson_scheme_matches_function(self):
+        acct = GaussianAccountant(q=0.1, noise_multiplier=1.1, delta=1e-5,
+                                  scheme="poisson")
+        assert acct.epsilon(40) == pytest.approx(
+            epsilon_spent(0.1, 1.1, 40, 1e-5), rel=1e-12)
+
+    def test_unknown_scheme_rejected(self):
+        with pytest.raises(ValueError, match="scheme"):
+            GaussianAccountant(q=0.1, noise_multiplier=1.0, delta=1e-5,
+                               scheme="gumbel")
+
+
+class TestMaxCommits:
+    @settings(max_examples=8)
+    @given(st.floats(0.05, 0.5), st.floats(0.8, 3.0), st.floats(0.5, 30.0))
+    def test_bracket_property(self, q, sigma, target):
+        """``epsilon(max_commits) < target <= epsilon(max_commits + 1)``
+        whenever at least one commit is affordable — the exact contract
+        the engine's pre-run scan cap relies on."""
+        acct = GaussianAccountant(q=q, noise_multiplier=sigma, delta=1e-5)
+        cap = acct.max_commits(target)
+        assert cap >= 0
+        assert acct.epsilon(cap) < target
+        assert acct.epsilon(cap + 1) >= target
+
+    def test_unaffordable_budget_is_zero(self):
+        acct = GaussianAccountant(q=0.5, noise_multiplier=0.7, delta=1e-5)
+        tiny = acct.epsilon(1) / 2.0
+        assert acct.max_commits(tiny) == 0
+
+    def test_validation(self):
+        acct = GaussianAccountant(q=0.5, noise_multiplier=1.0, delta=1e-5)
+        with pytest.raises(ValueError, match="target"):
+            acct.max_commits(0.0)
 
 
 class TestEpsilonProperties:

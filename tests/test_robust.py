@@ -512,6 +512,117 @@ class TestClippedDP:
         np.testing.assert_allclose(float(lo), 1.0, rtol=1e-6)
         np.testing.assert_allclose(float(hi), 0.1, rtol=1e-6)
 
+    def test_uniform_weights_commit_is_plain_clipped_mean(self):
+        """``uniform_weights=True`` ignores the criteria entirely: the
+        commit is the uniform mean of clipped updates (p_k = 1/n), the
+        DP-safe configuration the accountant's sensitivity bound
+        assumes."""
+        strat = ClippedDPStrategy(clip_norm=100.0, noise_multiplier=0.0,
+                                  uniform_weights=True)
+        state = self._state(strat)
+        rng = np.random.default_rng(5)
+        stacked = rng.normal(size=(4, 6)).astype(np.float32)
+        inp = _toy_inputs(stacked)
+        # skew the criteria hard — a weighted commit would tilt toward
+        # client 0, the uniform one must not move
+        inp.criteria = normalize_criteria(
+            jnp.asarray(rng.uniform(0.1, 1.0, (4, 3)), jnp.float32)
+            .at[0].set(5.0), None)
+        new, ys = strat.step(state, inp, CFG3, False, None)
+        np.testing.assert_allclose(np.asarray(new.params),
+                                   stacked.mean(0), rtol=1e-5, atol=1e-6)
+        # entropy metric is the uniform one — metrics are released and
+        # must not carry the un-noised criteria weights either
+        np.testing.assert_allclose(float(ys["entropy"]), math.log(4.0),
+                                   rtol=1e-6)
+
+    def test_uniform_weights_excludes_dropped_clients(self):
+        strat = ClippedDPStrategy(clip_norm=100.0, noise_multiplier=0.0,
+                                  uniform_weights=True)
+        state = self._state(strat)
+        rng = np.random.default_rng(6)
+        stacked = rng.normal(size=(4, 6)).astype(np.float32)
+        contrib = jnp.asarray([1.0, 0.5, 0.0, 1.0], jnp.float32)
+        new, _ = strat.step(state, _toy_inputs(stacked, contrib=contrib),
+                            CFG3, False, None)
+        np.testing.assert_allclose(np.asarray(new.params),
+                                   stacked[[0, 1, 3]].mean(0),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# DP accounting: the engine only meters configurations the bound covers,
+# and an enforced budget stops the run *before* it is exceeded
+# ---------------------------------------------------------------------------
+
+class TestPrivacyBudget:
+    DP_AGG = AggregationConfig(criteria=("Ds", "Ld", "Md", "update_norm"),
+                               priority=(3, 2, 0, 1))
+
+    def _data(self):
+        return make_synth_femnist(num_clients=12, mean_samples=10, seed=0)
+
+    def _cfg(self, **kw):
+        base = dict(
+            fraction=0.25, batch_size=5, local_epochs=1, lr=0.1,
+            max_rounds=20, eval_every=4, aggregation=self.DP_AGG,
+        )
+        base.update(kw)
+        return FedSimConfig(**base)
+
+    def test_accounting_rejects_criteria_weights(self):
+        """Prioritized criteria weights give some client a coefficient
+        above 1/n and are computed from un-noised statistics — the
+        accountant refuses to meter them."""
+        cfg = self._cfg(
+            strategy=ClippedDPStrategy(clip_norm=1.0, noise_multiplier=0.5),
+            dp_delta=1e-3)
+        params = init_mlp_params(jax.random.key(0), hidden=8)
+        with pytest.raises(ValueError, match="uniform_weights"):
+            FederatedSimulation(self._data(), params, mlp_loss,
+                                mlp_accuracy, cfg)
+
+    def test_accounting_rejects_weighted_selection(self):
+        """Amplification-by-subsampling assumes a uniform cohort draw;
+        availability-weighted policies void the bound."""
+        cfg = self._cfg(
+            strategy=ClippedDPStrategy(clip_norm=1.0, noise_multiplier=0.5,
+                                       uniform_weights=True),
+            dp_delta=1e-3,
+            scenario=ScenarioConfig(preset="tiered-fleet",
+                                    bias_sampling=True, seed=0))
+        params = init_mlp_params(jax.random.key(0), hidden=8)
+        with pytest.raises(ValueError, match="uniform .*selection"):
+            FederatedSimulation(self._data(), params, mlp_loss,
+                                mlp_accuracy, cfg)
+
+    def test_budget_enforced_before_overshoot(self):
+        """With eval_every > 1 the scan is capped at the affordable
+        commit count: the run halts flagged ``budget_exhausted`` with the
+        spent epsilon strictly below the target — never reported as
+        exhausted only after over-budget state was committed."""
+        from repro.federated.privacy import GaussianAccountant
+
+        acct = GaussianAccountant(q=0.25, noise_multiplier=0.5, delta=1e-3)
+        # a target only 2 commits can afford, sitting strictly between
+        # the 2- and 3-commit spends
+        target = 0.5 * (acct.epsilon(2) + acct.epsilon(3))
+        assert acct.max_commits(target) == 2
+        cfg = self._cfg(
+            strategy=ClippedDPStrategy(clip_norm=1.0, noise_multiplier=0.5,
+                                       uniform_weights=True),
+            dp_delta=1e-3, dp_epsilon=target)
+        params = init_mlp_params(jax.random.key(0), hidden=8)
+        sim = FederatedSimulation(self._data(), params, mlp_loss,
+                                  mlp_accuracy, cfg)
+        res = sim.run(targets=(2.0,), device_fracs=(1.0,), verbose=False)
+        assert res.budget_exhausted
+        assert res.metrics, "capped run still evaluates the spent blocks"
+        assert res.metrics[-1].commits == 2
+        for m in res.metrics:
+            assert m.epsilon_spent is not None
+            assert m.epsilon_spent < target
+
 
 # ---------------------------------------------------------------------------
 # selection must not see the corrupt mask
