@@ -1,6 +1,6 @@
 """Round-loop benchmark: dispatch/hotpath x strategies x selection policies.
 
-Seven sections, all on synthetic workloads (see ``benchmarks/README.md``
+Eight sections, all on synthetic workloads (see ``benchmarks/README.md``
 for the metric schema and sim-time units):
 
 * **Dispatch** — steady-state rounds/sec of the engine's two execution
@@ -43,6 +43,15 @@ for the metric schema and sim-time units):
   per-upload wire bytes and cumulative uplink bytes to target; the
   ``paper_cnn`` block restates the analytic per-upload reduction
   (~4x int8 / ~8x int4) at the paper CNN's 6.6M-param scale.
+* **Faults** — barrier vs deadline rounds under faulty fleets: the
+  straggler-heavy ``tiered-fleet`` and the hostile ``outage`` preset
+  (mid-round transient crashes, permanent departures, correlated
+  regional outage waves), each under the plain sync barrier and under
+  deadline rounds (over-provisioned cohort, per-round completion
+  budget, quorum-gated commits with exponential retry backoff).
+  Headline: the deadline caps the slow tier's tail so ``tiered-fleet``
+  reaches the accuracy target in less simulated time than the barrier,
+  and holds ``outage`` accuracy within the documented envelope.
 * **Hotpath** — the flat-vector server path vs the default pytree path
   at the paper CNN's parameter scale (6.6M params, S=32): end-to-end
   round-block throughput, the carry-donation dispatch delta, and
@@ -167,13 +176,17 @@ def _strategy_cfg(name: str, rounds: int, block: int,
 
 
 def _run_to_target(data, params, cfg: FedSimConfig,
-                   target_acc: float, with_epsilon: bool = False) -> dict:
+                   target_acc: float, with_epsilon: bool = False,
+                   with_faults: bool = False) -> dict:
     """One simulation run, summarized on the virtual clock.
 
     ``with_epsilon`` adds the DP accountant's spent budget at the last
     eval boundary (``None`` unless the config enables accounting via
     ``dp_delta``) — only the adaptive robust rows carry the column, so
     the committed-schema contract for every other record is unchanged.
+    ``with_faults`` adds the deadline-round telemetry (mean on-time
+    arrivals / dropped timeouts per executed round, total quorum
+    retries) — all zero for a barrier-sync run.
     """
     sim = FederatedSimulation(data, params, mlp_loss, mlp_accuracy, cfg)
     res = sim.run(targets=(target_acc,), device_fracs=(0.99,), verbose=False)
@@ -191,6 +204,13 @@ def _run_to_target(data, params, cfg: FedSimConfig,
     }
     if with_epsilon:
         out["epsilon_spent"] = res.metrics[-1].epsilon_spent
+    if with_faults:
+        n = max(1, n_rounds)
+        out["arrivals_per_round"] = \
+            sum(m.arrivals for m in res.metrics) / n
+        out["timeouts_per_round"] = \
+            sum(m.timeouts for m in res.metrics) / n
+        out["retries"] = int(sum(m.retries for m in res.metrics))
     return out
 
 
@@ -352,6 +372,63 @@ def bench_adaptive(data, params, rounds: int, block: int,
         cfg = _adaptive_cfg(sname, rounds, block, cohort)
         out[f"byzantine-colluding/{sname}"] = _run_to_target(
             data, params, cfg, target_acc, with_epsilon=True)
+    return out
+
+
+#: the fault-tolerance sweep grid — a straggler-heavy benign fleet and
+#: the hostile mid-round-fault fleet, each under the plain barrier and
+#: under deadline rounds
+FAULT_PRESETS = ("tiered-fleet", "outage")
+FAULT_MODES = ("barrier", "deadline")
+
+#: deadline-round knobs for the ``deadline`` mode — a 2.5-unit budget
+#: cuts the tiered fleet's slow-tier tail (tier dt means ~0.5/1.5/4.0)
+#: while over-provisioning and a 25% quorum keep commits flowing when
+#: the outage preset drops whole regions mid-round.  2.5 is the knee:
+#: at 2.0 the dropped slow-tier mass costs ~0.08 best-acc on ``outage``
+#: (outside the 0.05 envelope); past 2.5 the budget stops cutting the
+#: barrier's tail
+FAULT_DEADLINE = {"deadline": 2.5, "overprovision": 0.5, "quorum": 0.25}
+
+
+def _faults_cfg(preset: str, mode: str, rounds: int,
+                block: int) -> FedSimConfig:
+    common = dict(
+        fraction=0.25, batch_size=10, local_epochs=1, lr=0.1,
+        max_rounds=rounds, eval_every=block,
+        aggregation=AggregationConfig(priority=(2, 0, 1)),
+        scenario=ScenarioConfig(preset=preset, seed=0),
+    )
+    if mode == "deadline":
+        common.update(FAULT_DEADLINE)
+    return FedSimConfig(**common)
+
+
+def bench_faults(data, params, rounds: int, block: int,
+                 target_acc: float = 0.75) -> dict:
+    """Barrier vs deadline rounds: virtual time to target under faults.
+
+    Every preset x ``{barrier, deadline}`` combination runs the same
+    sync workload — ``barrier`` waits for the slowest selected client
+    each round, ``deadline`` over-provisions the cohort, drops arrivals
+    past the per-round budget, and commits partial waves that meet
+    quorum (failed quorum retries the round with exponential deadline
+    backoff).  The headline is the ``tiered-fleet`` pair: the deadline
+    caps the slow tier's tail so sim-time-to-target drops while the
+    over-provisioned cohort keeps enough arrivals per round to hold
+    accuracy.  The ``outage`` pair shows the same machinery absorbing
+    mid-round faults (transient crashes, permanent departures,
+    correlated regional outage waves) within the documented accuracy
+    envelope.  Deadline rows carry arrivals / timeouts per round and
+    the total quorum retries; barrier rows report the telemetry as
+    zeros.
+    """
+    out = {}
+    for preset in FAULT_PRESETS:
+        for mode in FAULT_MODES:
+            cfg = _faults_cfg(preset, mode, rounds, block)
+            out[f"{preset}/{mode}"] = _run_to_target(
+                data, params, cfg, target_acc, with_faults=True)
     return out
 
 
@@ -860,6 +937,7 @@ def main(clients: int = 64, rounds: int = 64, block: int = 16,
     robust = bench_robust(sdata, sparams, strat_rounds, 10, target_acc)
     adaptive = bench_adaptive(sdata, sparams, strat_rounds, 10, target_acc)
     bytes_sec = bench_bytes(sdata, sparams, strat_rounds, 10, target_acc)
+    faults = bench_faults(sdata, sparams, strat_rounds, 10, target_acc)
     hotpath = bench_hotpath(smoke=smoke)
     scale = bench_scale(smoke=smoke)
 
@@ -912,6 +990,17 @@ def main(clients: int = 64, rounds: int = 64, block: int = 16,
                 f"bytes_{preset}_{mode}_best_acc", b["best_acc"],
                 f"{b['bytes_reduction']:.2f}x wire reduction, "
                 f"{b['wire_bytes_per_upload']} B/upload",
+            ))
+    for preset in FAULT_PRESETS:
+        for mode in FAULT_MODES:
+            f = faults[f"{preset}/{mode}"]
+            rows.append((
+                f"faults_{preset}_{mode}_simtime_to_{target_acc:.2f}",
+                f["sim_time_to_target"]
+                if f["sim_time_to_target"] is not None else -1.0,
+                f"best_acc={f['best_acc']:.3f}, "
+                f"timeouts/round={f['timeouts_per_round']:.2f}, "
+                f"retries={f['retries']}",
             ))
     for mode in ("int8", "int4"):
         p = bytes_sec["paper_cnn"][mode]
@@ -992,6 +1081,15 @@ def main(clients: int = 64, rounds: int = 64, block: int = 16,
             **robust,
         },
         "bytes": bytes_sec,
+        "faults": {
+            "presets": list(FAULT_PRESETS),
+            "modes": list(FAULT_MODES),
+            "deadline": dict(FAULT_DEADLINE),
+            "acc_envelope": 0.05,
+            "target_acc": target_acc,
+            "clients": strat_clients, "max_rounds": strat_rounds,
+            **faults,
+        },
         "hotpath": hotpath,
         "scale": scale,
     }

@@ -17,9 +17,18 @@ cohort on ``byzantine-colluding``, and ``--strategy`` picks the defense
 ``clipped-dp`` row meters its Rényi privacy budget and reports the
 ``(epsilon, delta)`` spent.
 
+The ``outage`` preset (mid-round faults: transient crashes, permanent
+departures, correlated regional outage waves) rides the registry sweep
+like any other; ``--faults`` adds its fault-tolerant counterpoint row
+``outage+deadline`` — deadline rounds with over-provisioning, quorum and
+retry backoff (``--deadline`` sets the per-round budget) — reporting
+arrivals / timeouts / retries per round next to the accuracy numbers.
+
     PYTHONPATH=src python examples/scenario_fleet.py --rounds 60
     PYTHONPATH=src python examples/scenario_fleet.py \\
         --attack colluding --strategy multi-krum
+    PYTHONPATH=src python examples/scenario_fleet.py \\
+        --faults --deadline 2.0
 """
 from __future__ import annotations
 
@@ -65,6 +74,13 @@ def main() -> None:
                     choices=("trimmed-mean", "krum", "multi-krum",
                              "clipped-dp"),
                     help="defense for the hostile counterpoint row")
+    ap.add_argument("--faults", action="store_true",
+                    help="add the fault-tolerant counterpoint row: the "
+                         "outage preset under deadline rounds with over-"
+                         "provisioning, quorum and retry backoff")
+    ap.add_argument("--deadline", type=float, default=2.0,
+                    help="per-round completion-time budget for the "
+                         "--faults row (simulated-time units)")
     ap.add_argument("--out", default="checkpoints/scenarios.json")
     args = ap.parse_args()
 
@@ -113,6 +129,14 @@ def main() -> None:
                 priority=(3, 2, 0, 1))
             row["cfg_kw"] = dict(dp_delta=1e-3)
         runs.append(row)
+    if args.faults:
+        # fault-tolerance counterpoint: same hostile outage fleet, but
+        # the server runs deadline rounds — over-provisioned cohort,
+        # quorum-gated commits, exponential retry backoff
+        runs.append(dict(
+            label="outage+deadline", preset="outage", faults=True,
+            cfg_kw=dict(deadline=args.deadline, overprovision=0.5,
+                        quorum=0.25)))
 
     report = {}
     for run in runs:
@@ -151,6 +175,20 @@ def main() -> None:
             eps_txt = f"{eps:.2f}" if eps is not None else "n/a"
             print(f"[{label:22s}] privacy budget spent: "
                   f"eps={eps_txt} at delta=1e-3")
+        if run.get("faults"):
+            n_rounds = res.metrics[-1].round if res.metrics else args.rounds
+            arr = sum(m.arrivals for m in res.metrics)
+            tos = sum(m.timeouts for m in res.metrics)
+            ret = sum(m.retries for m in res.metrics)
+            sim_t = res.metrics[-1].sim_time if res.metrics else 0.0
+            report[label].update(
+                arrivals_per_round=arr / max(1, n_rounds),
+                timeouts_per_round=tos / max(1, n_rounds),
+                retries=ret, sim_time=sim_t)
+            print(f"[{label:22s}] arrivals/round="
+                  f"{arr / max(1, n_rounds):.2f} timeouts/round="
+                  f"{tos / max(1, n_rounds):.2f} retries={ret} "
+                  f"sim_time={sim_t:.1f}")
 
     out = Path(args.out)
     out.parent.mkdir(parents=True, exist_ok=True)

@@ -1,3 +1,23 @@
-from repro.checkpoint.io import load_metadata, restore_pytree, save_pytree
+from repro.checkpoint.io import (
+    SCHEMA_VERSION,
+    CheckpointMismatch,
+    checkpoint_path,
+    latest_checkpoint,
+    load_metadata,
+    restore_pytree,
+    restore_server_state,
+    save_pytree,
+    save_server_state,
+)
 
-__all__ = ["load_metadata", "restore_pytree", "save_pytree"]
+__all__ = [
+    "SCHEMA_VERSION",
+    "CheckpointMismatch",
+    "checkpoint_path",
+    "latest_checkpoint",
+    "load_metadata",
+    "restore_pytree",
+    "restore_server_state",
+    "save_pytree",
+    "save_server_state",
+]

@@ -1,14 +1,30 @@
 """Msgpack-based pytree checkpointing (no orbax/flax in this environment).
 
-Format: a msgpack map ``{treedef: str, leaves: [ {dtype, shape, data} ]}``.
-Works for any pytree of jnp/np arrays + python scalars; bf16 is stored via
-a uint16 view (msgpack/numpy have no native bfloat16).
+Format: a msgpack map ``{schema: int, keys: str, leaves: [ {dtype,
+shape, data} ], metadata: {...}}``.  Works for any pytree of jnp/np
+arrays + python scalars; bf16 is stored via a uint16 view (msgpack/numpy
+have no native bfloat16).  Writes are atomic (``.tmp`` + ``os.replace``)
+so a crash mid-write never leaves a truncated checkpoint behind.
+
+Restores are *validated*, not trusted: the stored treedef must match the
+``like`` template's, and every leaf's shape and dtype must match —
+mismatches raise a :class:`CheckpointMismatch` naming the offending leaf
+by its tree path.  The schema-version field is checked on load; files
+written before the field existed load as schema 0 (their layout is
+unchanged), files from a *newer* schema than this module understands are
+refused.
+
+On top of the generic ``save_pytree``/``restore_pytree``,
+``save_server_state``/``restore_server_state`` checkpoint a federated
+engine carry plus its run metadata for crash recovery, with
+``checkpoint_path``/``latest_checkpoint`` managing the round-stamped
+file layout (see ``FedSimConfig(checkpoint_every=, checkpoint_dir=)``).
 """
 from __future__ import annotations
 
-import json
 import os
-from typing import Any
+import re
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +34,18 @@ import numpy as np
 PyTree = Any
 
 _BF16 = "bfloat16"
+
+#: current on-disk layout version.  Bump when the payload layout changes
+#: incompatibly; files stamped with a *larger* version are refused on
+#: load (an older reader cannot guess a newer layout), while files with
+#: no stamp at all predate the field and load as version 0.
+SCHEMA_VERSION = 1
+
+
+class CheckpointMismatch(ValueError):
+    """Restore-time validation failure: the file does not match the
+    ``like`` template (treedef / leaf shape / leaf dtype) or was written
+    by an incompatible schema version."""
 
 
 def _encode_leaf(x) -> dict:
@@ -42,6 +70,7 @@ def _decode_leaf(d: dict) -> np.ndarray:
 def save_pytree(path: str, tree: PyTree, metadata: dict | None = None) -> None:
     leaves, treedef = jax.tree.flatten(tree)
     payload = {
+        "schema": SCHEMA_VERSION,
         "keys": _treedef_repr(tree),
         "leaves": [_encode_leaf(x) for x in leaves],
         "metadata": metadata or {},
@@ -57,21 +86,60 @@ def _treedef_repr(tree: PyTree) -> str:
     return str(jax.tree.structure(tree))
 
 
+def _leaf_names(like: PyTree) -> list:
+    """One human-readable tree path per leaf, for mismatch errors."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(like)
+    return [jax.tree_util.keystr(kp) or "<root>" for kp, _ in flat]
+
+
 def restore_pytree(path: str, like: PyTree) -> PyTree:
-    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    """Restore into the structure of ``like``.
+
+    Validated, not trusted: the stored schema version, treedef, leaf
+    count, and every leaf's shape *and* dtype are checked against the
+    template, and a mismatch raises :class:`CheckpointMismatch` naming
+    the offending leaf by its tree path — a checkpoint from a different
+    model/config fails loudly instead of silently reinterpreting bytes.
+    """
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), raw=False)
+    schema = payload.get("schema", 0)  # pre-versioning files = legacy 0
+    if schema > SCHEMA_VERSION:
+        raise CheckpointMismatch(
+            f"{path}: written by checkpoint schema v{schema}, but this "
+            f"build reads at most v{SCHEMA_VERSION} — upgrade the code "
+            "or re-save the checkpoint"
+        )
     like_leaves, treedef = jax.tree.flatten(like)
+    stored_def = payload.get("keys")
+    like_def = _treedef_repr(like)
+    if stored_def is not None and stored_def != like_def:
+        raise CheckpointMismatch(
+            f"{path}: stored tree structure does not match the restore "
+            f"template:\n  stored:   {stored_def}\n  template: {like_def}"
+        )
     stored = payload["leaves"]
     if len(stored) != len(like_leaves):
-        raise ValueError(
-            f"checkpoint has {len(stored)} leaves, template has {len(like_leaves)}"
+        raise CheckpointMismatch(
+            f"{path}: checkpoint has {len(stored)} leaves, template has "
+            f"{len(like_leaves)}"
         )
+    names = _leaf_names(like)
     out = []
-    for ref, d in zip(like_leaves, stored):
+    for name, ref, d in zip(names, like_leaves, stored):
         arr = _decode_leaf(d)
         if tuple(arr.shape) != tuple(np.shape(ref)):
-            raise ValueError(f"shape mismatch: {arr.shape} vs {np.shape(ref)}")
+            raise CheckpointMismatch(
+                f"{path}: shape mismatch at leaf {name!r}: stored "
+                f"{tuple(arr.shape)}, template {tuple(np.shape(ref))}"
+            )
+        ref_dtype = np.asarray(ref).dtype if not hasattr(ref, "dtype") \
+            else ref.dtype
+        if str(arr.dtype) != str(ref_dtype):
+            raise CheckpointMismatch(
+                f"{path}: dtype mismatch at leaf {name!r}: stored "
+                f"{arr.dtype}, template {ref_dtype}"
+            )
         out.append(jnp.asarray(arr))
     return jax.tree.unflatten(treedef, out)
 
@@ -79,3 +147,51 @@ def restore_pytree(path: str, like: PyTree) -> PyTree:
 def load_metadata(path: str) -> dict:
     with open(path, "rb") as f:
         return msgpack.unpackb(f.read(), raw=False).get("metadata", {})
+
+
+# ----------------------------------------------------------------------
+# crash-recoverable server state (FedSimConfig checkpoint_every/-_dir)
+
+_CKPT_RE = re.compile(r"^server_state_(\d{8})\.msgpack$")
+
+
+def checkpoint_path(ckpt_dir: str, rnd: int) -> str:
+    """Round-stamped snapshot filename: ``server_state_00000042.msgpack``.
+
+    Zero-padded so lexicographic order is round order."""
+    return os.path.join(ckpt_dir, f"server_state_{rnd:08d}.msgpack")
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
+    """Highest-round snapshot in ``ckpt_dir``, or ``None`` if there is
+    none.  In-flight ``.tmp`` files (a crash mid-write) never match the
+    pattern, so a torn write is invisible here — the previous complete
+    snapshot stays the latest."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    best = None
+    for name in os.listdir(ckpt_dir):
+        m = _CKPT_RE.match(name)
+        if m and (best is None or int(m.group(1)) > best[0]):
+            best = (int(m.group(1)), name)
+    return os.path.join(ckpt_dir, best[1]) if best is not None else None
+
+
+def save_server_state(path: str, state: PyTree,
+                      metadata: dict | None = None) -> None:
+    """Snapshot a federated engine carry (:class:`~repro.federated.
+    engine.ServerState` — params, quality/priority, staleness clocks,
+    async buffer, EF residuals, virtual clock, deadline backoff) plus
+    run metadata.  The carry is a registered pytree, so this is
+    ``save_pytree`` with a documented contract: ``restore_server_state``
+    against a same-config template round-trips it bit for bit."""
+    save_pytree(path, state, metadata)
+
+
+def restore_server_state(path: str, like: PyTree) -> Tuple[PyTree, dict]:
+    """Restore a server-state snapshot into the structure of ``like``
+    (a fresh ``init_state()`` of the same configuration) and return
+    ``(state, metadata)``.  Validation is :func:`restore_pytree`'s —
+    treedef/shape/dtype mismatches raise :class:`CheckpointMismatch`
+    naming the leaf."""
+    return restore_pytree(path, like), load_metadata(path)

@@ -144,6 +144,15 @@ class ServerState:
     next participating upload by the simulation round body (strategies
     never touch it; ``replace``-based steps carry it through).  ``None``
     on uncompressed runs, keeping the golden-pinned carry structure.
+
+    ``deadline`` is the deadline-round backoff carry
+    (``FedSimConfig(deadline=...)``): the f32 scalar *effective* arrival
+    deadline for the next round — reset to the configured base whenever
+    a round meets its quorum, multiplied by the backoff factor (capped)
+    whenever it does not (:func:`deadline_backoff_step`).  Maintained by
+    the simulation round body, replicated under a mesh, serialized with
+    the rest of the carry by the checkpoint layer.  ``None`` on runs
+    without deadlines, keeping the golden-pinned carry structure.
     """
 
     params: PyTree
@@ -157,12 +166,13 @@ class ServerState:
     buffer_count: Optional[jax.Array] = None   # buffered arrivals (i32)
     in_buffer: Optional[jax.Array] = None      # [K] 0/1 pending-arrival mask
     error_fb: Optional[jax.Array] = None       # [K, N] quantization residuals
+    deadline: Optional[jax.Array] = None       # effective round deadline (f32)
 
     def tree_flatten(self):
         children = (self.params, self.quality, self.priority_idx,
                     self.last_sync, self.sim_time, self.commits,
                     self.buffer, self.buffer_weight, self.buffer_count,
-                    self.in_buffer, self.error_fb)
+                    self.in_buffer, self.error_fb, self.deadline)
         return children, None
 
     @classmethod
@@ -234,6 +244,25 @@ def _scatter_round(last_sync: jax.Array, sel: jax.Array, mask: jax.Array,
 
 def _entropy(p: jax.Array) -> jax.Array:
     return -jnp.sum(p * jnp.log(jnp.maximum(p, 1e-12)))
+
+
+def deadline_backoff_step(eff_deadline: jax.Array, quorum_met: jax.Array,
+                          base: float, factor: float,
+                          cap: float) -> jax.Array:
+    """Next round's effective arrival deadline (exponential retry backoff).
+
+    A round that meets its quorum resets the deadline to the configured
+    ``base``; a quorum failure retries the next round with the deadline
+    multiplied by ``factor`` (>= 1), saturating at ``cap`` — the server
+    waits longer and longer for a struggling fleet, but never unboundedly.
+    Pure jnp on a traced carry scalar, so the backoff state lives in
+    ``ServerState.deadline`` and survives scan blocks and checkpoints.
+    Property-tested in ``tests/test_faults.py``: monotone non-decreasing
+    under consecutive failures, capped at ``max(base, cap)``, reset on
+    success.
+    """
+    backed = jnp.minimum(eff_deadline * factor, cap)
+    return jnp.where(quorum_met, base, jnp.maximum(backed, eff_deadline))
 
 
 def _weighted_agg(stacked: PyTree, p: jax.Array,

@@ -52,6 +52,30 @@ every pre-existing preset keeps its exact random streams bit for bit):
   *simulation* layer injects the attack inside the vmapped local
   training (see ``federated.attacks``), this module only carries the
   flags.  Selection policies are deliberately blind to ``corrupt``.
+
+Mid-round faults (:class:`FaultSchedule`, the ``outage`` preset): the
+dropout model above is *i.i.d. per round* — each upload loss is an
+independent coin flip.  Production fleets also lose clients in three
+correlated ways the i.i.d. model cannot express:
+
+* **transient crashes** — the app is killed / the device reboots while
+  the round is in flight (per-client ``crash_prob``, an independent
+  stream on top of network dropout),
+* **persistent departures** — hardware death or a permanent opt-out:
+  from ``fail_round`` on, the client's uploads never arrive again
+  (unlike churn's *availability* windows, a failed client still gets
+  selected and still trains — the server just never hears back),
+* **correlated outage waves** — a cell tower or regional backbone goes
+  down and takes its whole ``region`` with it for ``outage_len``
+  consecutive rounds (one Bernoulli(``outage_prob``) draw per region per
+  window, from a stream fixed at fleet-creation time so a window's fate
+  is identical on every shard and across checkpoint resumes).
+
+All three strike *after* local training: a faulted client was selected,
+trained and burned its budget — its update simply never arrives (it is
+masked out of aggregation exactly like a dropout).  Fault gates are
+static ``is None`` checks like every other hostile field, so fleets
+without a schedule trace the exact pre-fault program.
 """
 from __future__ import annotations
 
@@ -86,6 +110,119 @@ class ScenarioConfig:
     corrupt_frac: float = 0.25     # fraction of clients flagged corrupt
     attack: str = "sign-flip"      # attack name (see federated.attacks.ATTACKS)
     attack_scale: float = 1.0      # attack magnitude multiplier
+    # fault knobs (read by "outage"; ignored elsewhere)
+    crash_prob: float = 0.08       # mean per-round transient crash probability
+    fail_frac: float = 0.1         # fraction that departs permanently mid-run
+    outage_prob: float = 0.25      # per-region per-window outage probability
+    outage_len: int = 6            # rounds per correlated outage window
+    outage_regions: int = 8        # number of correlated-failure domains
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class FaultSchedule:
+    """Mid-round fault model: transient, persistent and correlated losses.
+
+    Extends the fleet's i.i.d. ``dropout_prob`` with the three production
+    failure modes an independent per-round coin cannot express.  Faults
+    materialize as clients that were *selected and trained* but whose
+    updates never arrive — the mask composes into
+    :func:`participation`'s upload-survival product, after training.
+
+    * ``crash_prob``   ``[K]`` f32 in [0, 1] — per-round transient crash
+      probability (app killed / device rebooted mid-round); an
+      independent Bernoulli stream on top of network dropout
+    * ``fail_round``   ``[K]`` i32 — first round of a *persistent*
+      departure: from this round on the client's uploads never arrive
+      (``NEVER_FAILS`` = the client outlives the run).  Unlike churn's
+      ``arrive/depart`` windows this does not gate availability — a
+      failed client still looks alive to selection and still trains
+    * ``region``       ``[K]`` i32 in [0, num_regions) — correlated-
+      failure domain (cell tower / regional backbone)
+    * ``outage_key``   PRNG key fixed at fleet creation — outage waves
+      are a pure function of ``(key, window, region)``, so every shard
+      (and every checkpoint resume) sees the same wave
+    * ``outage_prob``  f32 scalar — per-region probability that a given
+      ``outage_len``-round window is an outage for that region
+    * ``outage_len``   static int — rounds per outage window; a region
+      that draws an outage is dark for the *whole* window
+    * ``num_regions``  static int — number of failure domains
+    """
+
+    crash_prob: jax.Array
+    fail_round: jax.Array
+    region: jax.Array
+    outage_key: jax.Array
+    outage_prob: jax.Array
+    outage_len: int = 6
+    num_regions: int = 8
+
+    def tree_flatten(self):
+        children = (self.crash_prob, self.fail_round, self.region,
+                    self.outage_key, self.outage_prob)
+        return children, (self.outage_len, self.num_regions)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        outage_len, num_regions = aux
+        return cls(*children, outage_len=outage_len,
+                   num_regions=num_regions)
+
+
+#: ``FaultSchedule.fail_round`` sentinel: the client outlives any run.
+NEVER_FAILS = 2 ** 30
+
+
+def fault_survival(
+    faults: FaultSchedule,
+    sel: jax.Array,
+    round_idx: jax.Array,
+    key: jax.Array,
+) -> jax.Array:
+    """[S] 0/1 upload-arrival mask for the selected clients this round.
+
+    An upload survives iff the client (a) has not permanently departed,
+    (b) does not transiently crash this round, and (c) its region is not
+    in an outage window.  The crash Bernoulli draws from ``key`` (the
+    round's dedicated fault stream); the outage draw folds the *window*
+    index into the schedule's own ``outage_key`` so all ``outage_len``
+    rounds of a window agree.  Pure jnp — safe inside jit / lax.scan.
+    """
+    alive = (round_idx < faults.fail_round[sel]).astype(jnp.float32)
+    crash = jax.random.bernoulli(key, faults.crash_prob[sel])
+    window = round_idx // faults.outage_len
+    dark = jax.random.bernoulli(
+        jax.random.fold_in(faults.outage_key, window),
+        faults.outage_prob, (faults.num_regions,),
+    )
+    up = 1.0 - dark[faults.region[sel]].astype(jnp.float32)
+    return alive * (1.0 - crash.astype(jnp.float32)) * up
+
+
+def make_fault_schedule(key: jax.Array, n: int,
+                        cfg: ScenarioConfig) -> FaultSchedule:
+    """Sample a :class:`FaultSchedule` from the config's fault knobs.
+
+    ``crash_prob`` is spread around ``cfg.crash_prob`` (uniform in
+    ``[0.5x, 1.5x]``); ``cfg.fail_frac`` of the fleet draws a permanent
+    ``fail_round`` staggered over the first six periods; regions are
+    assigned uniformly.  Deterministic in ``key`` — attach to any fleet
+    via ``dataclasses.replace(fleet, faults=...)``.
+    """
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    crash = cfg.crash_prob * jax.random.uniform(
+        k1, (n,), minval=0.5, maxval=1.5)
+    fails = jax.random.bernoulli(k2, cfg.fail_frac, (n,))
+    when = jax.random.randint(k3, (n,), cfg.period, 6 * cfg.period)
+    return FaultSchedule(
+        crash_prob=jnp.clip(crash, 0.0, 1.0).astype(jnp.float32),
+        fail_round=jnp.where(fails, when, NEVER_FAILS).astype(jnp.int32),
+        region=jax.random.randint(k4, (n,), 0, cfg.outage_regions),
+        outage_key=jax.random.fold_in(k5, 0),
+        outage_prob=jnp.asarray(cfg.outage_prob, jnp.float32),
+        outage_len=cfg.outage_len,
+        num_regions=cfg.outage_regions,
+    )
 
 
 @jax.tree_util.register_pytree_node_class
@@ -111,6 +248,9 @@ class DeviceFleet:
     * ``depart_round`` ``[K]`` int32 — first round after it leaves
     * ``diurnal_amp``  ``[K]`` float in [0, 1] — sinusoidal availability
       wave amplitude (0 = always-on baseline)
+    * ``faults``       mid-round :class:`FaultSchedule` — transient
+      crashes, persistent departures and correlated outage waves that
+      strike *after* local training (the ``outage`` preset)
     """
 
     tier: jax.Array
@@ -125,18 +265,25 @@ class DeviceFleet:
     diurnal_amp: Optional[jax.Array] = None
     attack: str = "sign-flip"
     attack_scale: float = 1.0
+    faults: Optional[FaultSchedule] = None
 
     def tree_flatten(self):
         children = (self.tier, self.slowdown, self.dropout_prob,
                     self.duty_cycle, self.phase, self.corrupt,
-                    self.arrive_round, self.depart_round, self.diurnal_amp)
+                    self.arrive_round, self.depart_round, self.diurnal_amp,
+                    self.faults)
         return children, (self.period, self.attack, self.attack_scale)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         period, attack, attack_scale = aux
-        return cls(*children, period=period, attack=attack,
-                   attack_scale=attack_scale)
+        (tier, slowdown, dropout_prob, duty_cycle, phase, corrupt,
+         arrive_round, depart_round, diurnal_amp, faults) = children
+        return cls(tier=tier, slowdown=slowdown, dropout_prob=dropout_prob,
+                   duty_cycle=duty_cycle, phase=phase, period=period,
+                   corrupt=corrupt, arrive_round=arrive_round,
+                   depart_round=depart_round, diurnal_amp=diurnal_amp,
+                   attack=attack, attack_scale=attack_scale, faults=faults)
 
     @property
     def num_clients(self) -> int:
@@ -307,6 +454,26 @@ def _byzantine_colluding(key, n: int, cfg: ScenarioConfig) -> DeviceFleet:
     return _byzantine(key, n, hostile)
 
 
+def _outage(key, n: int, cfg: ScenarioConfig) -> DeviceFleet:
+    """Tiered fleet under mid-round faults: the fault-tolerance stressor.
+
+    The `tiered-fleet` compute/dropout profile plus a
+    :class:`FaultSchedule`: ~``cfg.crash_prob`` per-round transient
+    crashes, ``cfg.fail_frac`` of the fleet departing permanently over
+    the first six periods, and regional outage waves
+    (``outage_regions`` domains, each dark for whole
+    ``outage_len``-round windows w.p. ``outage_prob``).  Every fault
+    lands *after* local training — the straggler barrier still pays for
+    the work, the aggregation never sees the update — which is exactly
+    the regime deadline rounds + over-provisioning
+    (``FedSimConfig(deadline=..., overprovision=...)``) are built for.
+    """
+    k_fleet, k_fault = jax.random.split(key)
+    fleet = _tiered_fleet(k_fleet, n, cfg)
+    return dataclasses.replace(
+        fleet, faults=make_fault_schedule(k_fault, n, cfg))
+
+
 #: preset name -> fleet sampler ``(key, num_clients, cfg) -> DeviceFleet``:
 #:   * ``uniform``       — identity fleet: always on, no dropout, 1x compute
 #:     (reproduces mask-free runs bit for bit — the golden-test preset)
@@ -327,6 +494,10 @@ def _byzantine_colluding(key, n: int, cfg: ScenarioConfig) -> DeviceFleet:
 #:     estimate the honest mean/std from their own local steps and upload
 #:     within-trim-band ALIE shifts (or the negated mean) — the
 #:     trimmed-mean failure mode that distance defenses (Krum) catch
+#:   * ``outage``        — tiered fleet + mid-round :class:`FaultSchedule`:
+#:     transient crashes, permanent departures and correlated regional
+#:     outage waves, all striking *after* local training — the
+#:     deadline-round / crash-recovery stress case
 PRESETS: Dict[str, object] = {
     "uniform": _uniform,
     "mobile-heavy": _mobile_heavy,
@@ -336,6 +507,7 @@ PRESETS: Dict[str, object] = {
     "diurnal": _diurnal,
     "byzantine": _byzantine,
     "byzantine-colluding": _byzantine_colluding,
+    "outage": _outage,
 }
 
 
@@ -406,5 +578,11 @@ def participation(
         avail = avail * jax.random.bernoulli(k_wave, p_on).astype(jnp.float32)
     drop = jax.random.bernoulli(key, fleet.dropout_prob[sel]).astype(jnp.float32)
     mask = avail * (1.0 - drop)
+    if fleet.faults is not None:
+        # mid-round faults compose into the same post-training upload-
+        # survival product as dropout; a dedicated fold keeps the fault
+        # stream independent of the dropout draw that consumed ``key``
+        mask = mask * fault_survival(fleet.faults, sel, round_idx,
+                                     jax.random.fold_in(key, 5))
     contribution = mask / fleet.slowdown[sel]
     return mask, contribution

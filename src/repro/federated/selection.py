@@ -112,6 +112,27 @@ class SelectionContext:
     time_key: Optional[jax.Array] = None
 
 
+def overprovisioned_round_size(base: int, overprovision: float,
+                               num_clients: int) -> int:
+    """Round size with fault-tolerance headroom: ``ceil(S·(1+o))``.
+
+    Deadline rounds (``FedSimConfig(deadline=..., overprovision=...)``)
+    select more clients than the target cohort so that crashed / timed-
+    out uploads can be absorbed without starving the quorum — the
+    standard production over-provisioning trick (cf. the system design
+    in Bonawitz et al., 2019).  Every policy sees the inflated ``n``
+    through :class:`SelectionContext`; the result is clamped to the
+    fleet size.  Static (a Python int): the wave shape is fixed at
+    trace time like every other round dimension.
+    """
+    import math
+
+    if overprovision < 0:
+        raise ValueError(
+            f"overprovision must be >= 0, got {overprovision}")
+    return min(num_clients, math.ceil(base * (1.0 + overprovision)))
+
+
 class SelectionPolicy:
     """Protocol: how one round's participants are drawn.
 

@@ -66,6 +66,7 @@ The engine is model-agnostic: it takes ``loss_fn(params, x, y)`` and
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -89,6 +90,7 @@ from repro.federated.engine import (
     RoundInputs,
     ServerState,
     SyncStrategy,
+    deadline_backoff_step,
 )
 from repro.federated.sampler import num_selected
 from repro.federated.scenarios import (
@@ -103,6 +105,7 @@ from repro.federated.selection import (
     SelectionContext,
     SelectionPolicy,
     UniformPolicy,
+    overprovisioned_round_size,
 )
 from repro.kernels import collective as kcoll
 from repro.kernels import ops as kops
@@ -175,6 +178,34 @@ class FedSimConfig:
     standard EF trick that stops quantization bias accumulating across
     rounds.  ``compress="none"`` (default) traces the exact golden
     program: no quantization code enters the round step.
+
+    ``deadline`` turns on fault-tolerant deadline rounds: the server
+    over-provisions the cohort (``ceil(S·(1+overprovision))`` clients
+    selected, clamped to the fleet), waits ``deadline`` simulated-time
+    units, and commits the partial wave of on-time arrivals — uploads
+    whose sampled ``completion_time`` exceeds the effective deadline are
+    dropped and the prioritized-criteria weights renormalize over the
+    survivors (an all-timed-out round is a no-op, mirroring the
+    all-dropped contract).  When fewer than ``ceil(quorum·S)`` arrivals
+    make it (``S`` the *base* cohort, pre-over-provisioning), the round
+    is abandoned and the *effective* deadline — carried in
+    ``ServerState.deadline`` — backs off by ``deadline_backoff``×
+    (capped at ``deadline_cap``, default ``8·deadline``), resetting to
+    the base once a quorum lands.  The virtual clock charges
+    ``min(deadline, max arrival dt)`` per committed round (and the full
+    effective deadline for an abandoned one) instead of the unbounded
+    straggler barrier.  ``deadline=None`` (default) traces the exact
+    golden program.  Incompatible with DP accounting: deadline drops
+    make the committed cohort data-dependent, voiding the
+    fixed-size-WOR subsampling bound.
+
+    ``checkpoint_every``/``checkpoint_dir`` write crash-recovery
+    checkpoints of the full engine carry (plus run metadata: metrics
+    history, targets hit, DP-accountant parameters) at scan-block
+    boundaries — ``checkpoint_every`` must be a multiple of
+    ``eval_every``.  Because all round randomness folds from per-round
+    keys, ``run(resume_from=...)`` reproduces the uninterrupted
+    trajectory bit for bit (gated in ``tests/test_checkpoint.py``).
     """
 
     fraction: float = 0.1          # paper: 10% of clients per round
@@ -198,6 +229,13 @@ class FedSimConfig:
     quant_block: int = kquant.QBLOCK  # absmax scale granularity (kernel tile)
     dp_delta: Optional[float] = None    # account (eps, delta) spent per commit
     dp_epsilon: Optional[float] = None  # halt when spent eps reaches this
+    deadline: Optional[float] = None    # per-round completion-time budget
+    overprovision: float = 0.0     # select ceil(S*(1+o)) to absorb timeouts
+    quorum: float = 0.0            # min on-time fraction of the base cohort
+    deadline_backoff: float = 2.0  # deadline multiplier on quorum failure
+    deadline_cap: Optional[float] = None   # backoff ceiling (None -> 8x)
+    checkpoint_every: Optional[int] = None  # rounds between state snapshots
+    checkpoint_dir: Optional[str] = None    # where snapshots land
 
 
 @dataclass
@@ -213,6 +251,11 @@ class RoundMetrics:
     sim_time: float = 0.0          # virtual clock at this eval point
     commits: int = 0               # global updates committed so far
     epsilon_spent: Optional[float] = None  # DP budget so far (accounting on)
+    # deadline-round telemetry (all zero unless cfg.deadline is set)
+    arrivals: float = 0.0          # on-time uploads over this eval block
+    timeouts: float = 0.0          # trained-but-late uploads dropped
+    retries: int = 0               # quorum-failed (backed-off) rounds
+    deadline: float = 0.0          # effective deadline after this block
 
 
 @dataclass
@@ -336,6 +379,79 @@ class FederatedSimulation:
                 self._dp_max_commits = self._accountant.max_commits(
                     float(config.dp_epsilon))
 
+        # Deadline rounds: static quorum size and backoff cap; the
+        # effective deadline itself is dynamic (ServerState.deadline).
+        self._deadline_on = config.deadline is not None
+        self._quorum_n = 0
+        self._deadline_cap = 0.0
+        if not self._deadline_on:
+            if config.overprovision:
+                raise ValueError(
+                    "FedSimConfig.overprovision requires deadline=... — "
+                    "headroom only means something when late uploads are "
+                    "dropped at a deadline"
+                )
+            if config.quorum:
+                raise ValueError(
+                    "FedSimConfig.quorum requires deadline=... — a quorum "
+                    "is counted over the deadline's on-time arrivals"
+                )
+        else:
+            if config.deadline <= 0:
+                raise ValueError(
+                    f"FedSimConfig.deadline must be > 0, got "
+                    f"{config.deadline}"
+                )
+            if not 0.0 <= config.quorum <= 1.0:
+                raise ValueError(
+                    f"FedSimConfig.quorum must be in [0, 1], got "
+                    f"{config.quorum}"
+                )
+            if config.deadline_backoff < 1.0:
+                raise ValueError(
+                    f"FedSimConfig.deadline_backoff must be >= 1, got "
+                    f"{config.deadline_backoff} (a shrinking retry "
+                    "deadline can never recover a failed quorum)"
+                )
+            self._deadline_cap = (
+                float(config.deadline_cap)
+                if config.deadline_cap is not None
+                else 8.0 * float(config.deadline)
+            )
+            if self._deadline_cap < config.deadline:
+                raise ValueError(
+                    f"FedSimConfig.deadline_cap={config.deadline_cap} is "
+                    f"below the base deadline {config.deadline}"
+                )
+            if config.dp_delta is not None:
+                raise ValueError(
+                    "FedSimConfig(deadline=...) is incompatible with DP "
+                    "accounting: deadline drops make the committed cohort "
+                    "depend on sampled completion times, so the fixed-"
+                    "size-WOR subsampling rate the accountant assumes no "
+                    "longer holds"
+                )
+
+        # Crash-recovery checkpointing (see run(resume_from=...)).
+        if config.checkpoint_every is not None:
+            if config.checkpoint_dir is None:
+                raise ValueError(
+                    "FedSimConfig.checkpoint_every requires "
+                    "checkpoint_dir=... to write into"
+                )
+            if config.checkpoint_every <= 0:
+                raise ValueError(
+                    f"FedSimConfig.checkpoint_every must be >= 1, got "
+                    f"{config.checkpoint_every}"
+                )
+            if config.checkpoint_every % max(1, config.eval_every):
+                raise ValueError(
+                    f"FedSimConfig.checkpoint_every="
+                    f"{config.checkpoint_every} must be a multiple of "
+                    f"eval_every={config.eval_every}: snapshots are only "
+                    "consistent at scan-block boundaries"
+                )
+
         self._base_key = jax.random.key(config.seed)
         self._perms = all_permutations(config.aggregation.num_criteria())
         self._prio_init = self._perms.index(tuple(config.aggregation.priority))
@@ -438,7 +554,16 @@ class FederatedSimulation:
                         < self.t_counts[:, None]).astype(jnp.float32)
 
         # Fixed per-round shapes -> every jitted program compiles once.
-        self._num_sel = num_selected(data.num_clients, config.fraction)
+        # Deadline rounds inflate the wave with over-provisioning headroom
+        # (still static — the timeout gate is a mask, not a reshape); the
+        # quorum threshold counts against the *base* cohort size.
+        base_sel = num_selected(data.num_clients, config.fraction)
+        if self._deadline_on:
+            self._num_sel = overprovisioned_round_size(
+                base_sel, config.overprovision, data.num_clients)
+            self._quorum_n = max(1, math.ceil(config.quorum * base_sel))
+        else:
+            self._num_sel = base_sel
         if self._shard is not None and self._num_sel % self._shard.num_shards:
             raise ValueError(
                 f"round size S={self._num_sel} (fraction={config.fraction} "
@@ -478,6 +603,9 @@ class FederatedSimulation:
             state = replace(state, error_fb=jnp.zeros(
                 (self.data.num_clients, self._fspec.num_params), jnp.float32
             ))
+        if self._deadline_on:
+            state = replace(state, deadline=jnp.asarray(
+                self.cfg.deadline, jnp.float32))
         return state
 
     # ------------------------------------------------------------------
@@ -657,6 +785,15 @@ class FederatedSimulation:
         ef_on = self._ef_on
         n_flat = fspec.num_params
 
+        # deadline rounds: static quorum/backoff parameters (the dynamic
+        # effective deadline rides in the carry)
+        deadline_on = self._deadline_on
+        if deadline_on:
+            quorum_n = self._quorum_n
+            deadline_base = float(cfg.deadline)
+            backoff_factor = float(cfg.deadline_backoff)
+            deadline_cap = self._deadline_cap
+
         if flat and compress is not None and not colluding_on:
             # Compressed streaming: quantize inside the vmapped client,
             # so local_train's direct output is the int8 wave + its
@@ -810,6 +947,29 @@ class FederatedSimulation:
                 mask = mask * elig
                 contrib = contrib * elig
 
+            if deadline_on:
+                # Deadline gate: uploads later than the effective deadline
+                # never reach the server.  A wave whose on-time arrivals
+                # miss the quorum is abandoned wholesale — mask/contrib
+                # zero out, so every strategy's all-dropped guard makes
+                # the round a no-op — and the effective deadline backs
+                # off exponentially (capped), resetting to the base the
+                # next time a quorum lands.  Gating happens *before* the
+                # error-feedback fold and criteria normalization: a
+                # timed-out upload neither settles its quantization debt
+                # nor enters the weight denominator.
+                eff_deadline = state.deadline
+                on_time = (dt <= eff_deadline).astype(jnp.float32)
+                arrivals = jnp.sum(mask * on_time)
+                timeouts = jnp.sum(mask) - arrivals
+                quorum_met = arrivals >= quorum_n
+                live = quorum_met.astype(jnp.float32)
+                mask = mask * on_time * live
+                contrib = contrib * on_time * live
+                state = replace(state, deadline=deadline_backoff_step(
+                    eff_deadline, quorum_met, deadline_base,
+                    backoff_factor, deadline_cap))
+
             if ef_on:
                 # Fold this wave's residuals into the carry: participants
                 # (mask > 0) replace their row, everyone else keeps
@@ -866,6 +1026,15 @@ class FederatedSimulation:
                 eval_fn=lambda cand: self._eval_params(cand)[1],
             )
             ys["participants"] = jnp.sum(mask)
+            if deadline_on:
+                # the strategy charged the dead-round unit cost (1.0) for
+                # an abandoned wave; the server actually waited out the
+                # whole effective deadline before giving up
+                state = replace(state, sim_time=state.sim_time + jnp.where(
+                    quorum_met, 0.0, eff_deadline - 1.0))
+                ys["arrivals"] = arrivals
+                ys["timeouts"] = timeouts
+                ys["retried"] = 1.0 - live
             return state, ys
 
         return round_step
@@ -905,6 +1074,9 @@ class FederatedSimulation:
             # EF residuals shard like the other per-client state: each
             # shard owns the [K_loc, N] client block of the [K, N] carry
             error_fb=k_spec if self._ef_on else P(),
+            # the effective deadline is a replicated scalar (every shard
+            # sees the same masks from the same keys)
+            deadline=P(),
         )
 
         def block(state, round_ids, table):
@@ -925,12 +1097,94 @@ class FederatedSimulation:
         return run_block
 
     # ------------------------------------------------------------------
+    # crash-recovery checkpoints
+    @staticmethod
+    def _metrics_to_meta(metrics: List[RoundMetrics]) -> list:
+        """Msgpack-safe encoding of the metrics history.  ``frac_above``
+        has float keys (illegal as msgpack map keys), so it rides as an
+        item list; floats round-trip exactly (msgpack doubles)."""
+        out = []
+        for m in metrics:
+            d = dict(vars(m))
+            d["frac_above"] = [[t, v] for t, v in m.frac_above.items()]
+            d["priority"] = list(m.priority)
+            out.append(d)
+        return out
+
+    @staticmethod
+    def _metrics_from_meta(items: list) -> List[RoundMetrics]:
+        out = []
+        for d in items:
+            d = dict(d)
+            d["frac_above"] = {float(t): float(v)
+                               for t, v in d["frac_above"]}
+            d["priority"] = tuple(int(p) for p in d["priority"])
+            out.append(RoundMetrics(**d))
+        return out
+
+    def _run_fingerprint(self) -> dict:
+        """The static identity of a trajectory: resuming under any other
+        value of these would silently diverge from the original run, so
+        the restore path refuses a mismatch."""
+        cfg = self.cfg
+        return {
+            "seed": cfg.seed,
+            "fraction": cfg.fraction,
+            "max_rounds": cfg.max_rounds,
+            "eval_every": cfg.eval_every,
+            "batch_size": cfg.batch_size,
+            "local_epochs": cfg.local_epochs,
+            "lr": cfg.lr,
+            "flat_params": bool(self._flat),
+            "compress": cfg.compress,
+            "strategy": type(self.strategy).__name__,
+            "selection": type(self.policy).__name__,
+            "scenario": (cfg.scenario.preset
+                         if cfg.scenario is not None else None),
+            "deadline": cfg.deadline,
+            "overprovision": cfg.overprovision,
+            "quorum": cfg.quorum,
+        }
+
+    def _accountant_meta(self) -> Optional[dict]:
+        """DP-accountant parameters carried in the checkpoint — the spent
+        epsilon is a pure function of these and ``state.commits``, so
+        storing (q, noise, delta) makes the accountant itself
+        recoverable."""
+        if self._accountant is None:
+            return None
+        a = self._accountant
+        return {"q": float(a.q),
+                "noise_multiplier": float(a.noise_multiplier),
+                "delta": float(a.delta)}
+
+    def _save_checkpoint(self, rnd: int, state: ServerState,
+                         metrics: List[RoundMetrics],
+                         rounds_to: dict) -> str:
+        """One atomic snapshot of the engine carry + run metadata at a
+        block boundary.  A method (not inlined in ``run``) so the crash-
+        recovery gate can hook the write and kill the process right
+        after it."""
+        from repro.checkpoint import checkpoint_path, save_server_state
+
+        path = checkpoint_path(self.cfg.checkpoint_dir, rnd)
+        save_server_state(path, state, {
+            "round": int(rnd),
+            "metrics": self._metrics_to_meta(metrics),
+            "rounds_to": [[t, f, r] for (t, f), r in rounds_to.items()],
+            "fingerprint": self._run_fingerprint(),
+            "accountant": self._accountant_meta(),
+        })
+        return path
+
+    # ------------------------------------------------------------------
     def run(
         self,
         targets: Tuple[float, ...] = (0.75, 0.80),
         device_fracs: Tuple[float, ...] = (0.2, 0.3, 0.4, 0.5, 0.7, 0.75),
         log_every: int = 10,
         verbose: bool = True,
+        resume_from: Optional[str] = None,
     ) -> SimResult:
         """Drive up to ``cfg.max_rounds`` rounds and evaluate every block.
 
@@ -946,6 +1200,15 @@ class FederatedSimulation:
         met.  Returns a :class:`SimResult` whose ``metrics`` carry one
         :class:`RoundMetrics` per eval point, including the virtual-clock
         reading ``sim_time`` (see ``benchmarks/README.md`` for units).
+
+        ``resume_from`` restores a crash-recovery checkpoint (written by
+        ``checkpoint_every``/``checkpoint_dir`` at block boundaries) and
+        continues the run from its round: because every round's
+        randomness folds from the absolute round index, the resumed
+        trajectory — params, metrics, targets hit — is bit-for-bit the
+        uninterrupted one.  The checkpoint's config fingerprint must
+        match this simulation's, and ``targets``/``device_fracs`` must
+        match the original call.
         """
         cfg = self.cfg
         block = max(1, cfg.eval_every)
@@ -956,13 +1219,43 @@ class FederatedSimulation:
 
         budget_exhausted = False
         state = self.init_state()
+        rnd = 0
+        if resume_from is not None:
+            from repro.checkpoint import restore_server_state
+
+            state, meta = restore_server_state(resume_from, like=state)
+            fp = meta.get("fingerprint")
+            if fp != self._run_fingerprint():
+                raise ValueError(
+                    f"checkpoint {resume_from!r} was written by a "
+                    f"different configuration: {fp} vs "
+                    f"{self._run_fingerprint()}"
+                )
+            if meta.get("accountant") != self._accountant_meta():
+                raise ValueError(
+                    f"checkpoint {resume_from!r} carries DP-accountant "
+                    f"parameters {meta.get('accountant')} but this run "
+                    f"accounts with {self._accountant_meta()}"
+                )
+            meta_rt = {(float(t), float(f)): (None if r is None else int(r))
+                       for t, f, r in meta["rounds_to"]}
+            if set(meta_rt) != set(rounds_to):
+                raise ValueError(
+                    "resume_from: targets/device_fracs differ from the "
+                    "checkpointed run's goals"
+                )
+            rounds_to = meta_rt
+            metrics = self._metrics_from_meta(meta["metrics"])
+            rnd = int(meta["round"])
+        ckpt_every = cfg.checkpoint_every
+        next_ckpt = (((rnd // ckpt_every) + 1) * ckpt_every
+                     if ckpt_every is not None else None)
         if self.cfg.donate:
             # donated dispatches consume the carry's buffers in place —
             # copy so arrays the caller still holds (self.params and, for
             # resumed runs, a prior final_state) survive this run
             state = jax.tree.map(lambda x: jnp.array(x, copy=True), state)
 
-        rnd = 0
         while rnd < cfg.max_rounds:
             n = min(block, cfg.max_rounds - rnd)
             if self._dp_max_commits is not None:
@@ -984,12 +1277,22 @@ class FederatedSimulation:
                     break
                 n = min(n, remaining)
             round_ids = jnp.arange(rnd + 1, rnd + n + 1, dtype=jnp.int32)
+            blk_arrivals = blk_timeouts = 0.0
+            blk_retries = 0
             if cfg.use_scan:
                 state, ys, accs, global_acc = self._run_block(state, round_ids)
                 last = jax.tree.map(lambda a: a[-1], ys)
+                if self._deadline_on:
+                    blk_arrivals = float(jnp.sum(ys["arrivals"]))
+                    blk_timeouts = float(jnp.sum(ys["timeouts"]))
+                    blk_retries = int(jnp.sum(ys["retried"]))
             else:
                 for rid in round_ids:
                     state, last = self._run_one(state, rid)
+                    if self._deadline_on:
+                        blk_arrivals += float(last["arrivals"])
+                        blk_timeouts += float(last["timeouts"])
+                        blk_retries += int(last["retried"])
                 accs, global_acc = self._eval_all(state.params)
             rnd += n
 
@@ -1014,7 +1317,15 @@ class FederatedSimulation:
                 sim_time=float(state.sim_time),
                 commits=commits,
                 epsilon_spent=epsilon,
+                arrivals=blk_arrivals,
+                timeouts=blk_timeouts,
+                retries=blk_retries,
+                deadline=(float(state.deadline) if self._deadline_on
+                          else 0.0),
             ))
+            if next_ckpt is not None and rnd >= next_ckpt:
+                self._save_checkpoint(rnd, state, metrics, rounds_to)
+                next_ckpt = ((rnd // ckpt_every) + 1) * ckpt_every
             if verbose and (rnd % log_every == 0 or rnd >= cfg.max_rounds):
                 print(
                     f"[round {rnd:4d}] acc={float(global_acc):.4f} "

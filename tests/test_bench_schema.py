@@ -4,7 +4,8 @@ Two layers:
 
 * fast — the committed ``BENCH_roundloop.json`` carries every section
   the README documents (``dispatch``/``strategies``/``selection``/
-  ``robust``/``hotpath``/``scale``) with well-formed per-run records, and
+  ``robust``/``bytes``/``faults``/``hotpath``/``scale``) with
+  well-formed per-run records, and
   ``benchmarks/README.md`` documents each one.  This is the contract
   PRs diff trajectory numbers against: a section silently dropped from
   the harness shows up here, not three PRs later.
@@ -25,7 +26,7 @@ BENCH = os.path.join(ROOT, "BENCH_roundloop.json")
 README = os.path.join(ROOT, "benchmarks", "README.md")
 
 SECTIONS = ("dispatch", "strategies", "selection", "robust", "bytes",
-            "hotpath", "scale")
+            "faults", "hotpath", "scale")
 
 #: fields every _run_to_target-style record carries
 RUN_FIELDS = ("rounds_run", "final_acc", "best_acc", "commits",
@@ -141,6 +142,44 @@ class TestCommittedSchema:
             up = by[f"tiered-fleet/{mode}"]["uplink_bytes_to_target"]
             if up is not None and ref is not None:
                 assert up < ref
+
+    def test_faults_covers_preset_mode_grid(self, bench):
+        fa = bench["faults"]
+        assert sorted(fa["presets"]) == ["outage", "tiered-fleet"]
+        assert sorted(fa["modes"]) == ["barrier", "deadline"]
+        assert fa["deadline"]["deadline"] > 0
+        assert fa["deadline"]["overprovision"] >= 0
+        assert 0.0 <= fa["deadline"]["quorum"] <= 1.0
+        for preset in fa["presets"]:
+            for mode in fa["modes"]:
+                rec = fa[f"{preset}/{mode}"]
+                _check_run_record(rec)
+                for field in ("arrivals_per_round", "timeouts_per_round",
+                              "retries"):
+                    assert field in rec, f"missing fault telemetry {field}"
+                if mode == "barrier":
+                    # barrier rounds never drop arrivals or retry
+                    assert rec["timeouts_per_round"] == 0.0
+                    assert rec["retries"] == 0
+                else:
+                    assert rec["arrivals_per_round"] > 0
+
+    def test_faults_acceptance_envelope(self, bench):
+        """The PR's acceptance numbers: deadline rounds reach the 0.75
+        accuracy target on ``tiered-fleet`` in less simulated time than
+        the straggler barrier, and hold ``outage`` accuracy within the
+        documented envelope of the barrier baseline."""
+        fa = bench["faults"]
+        dl = fa["tiered-fleet/deadline"]
+        ba = fa["tiered-fleet/barrier"]
+        assert dl["sim_time_to_target"] is not None, \
+            "deadline sync never reached the target on tiered-fleet"
+        if ba["sim_time_to_target"] is not None:
+            assert dl["sim_time_to_target"] < ba["sim_time_to_target"]
+        env = fa["acc_envelope"]
+        assert 0.0 < env <= 0.1
+        assert fa["outage/deadline"]["best_acc"] >= \
+            fa["outage/barrier"]["best_acc"] - env
 
     def test_hotpath_headline_fields(self, bench):
         h = bench["hotpath"]

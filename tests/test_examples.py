@@ -58,6 +58,27 @@ class TestFleetExamples:
         for rec in report.values():
             assert 0.0 <= rec["best_acc"] <= 1.0
 
+    def test_scenario_fleet_faults_deadline_row(self, tmp_path,
+                                                monkeypatch, capsys):
+        # --faults adds the outage+deadline counterpoint: outage-preset
+        # fleet under deadline rounds (over-provisioning, quorum, retry
+        # backoff), with arrivals/timeouts/retries reported per round
+        out = tmp_path / "scenarios_faults.json"
+        _run_main("scenario_fleet",
+                  ["--clients", "8", "--rounds", "2", "--hidden", "16",
+                   "--block", "2", "--faults", "--deadline", "2.0",
+                   "--out", str(out)], monkeypatch)
+        assert "arrivals/round" in capsys.readouterr().out
+        report = json.loads(out.read_text())
+        assert "outage" in report          # the preset itself is swept
+        rec = report["outage+deadline"]
+        assert 0.0 <= rec["best_acc"] <= 1.0
+        for key in ("arrivals_per_round", "timeouts_per_round", "retries",
+                    "sim_time"):
+            assert key in rec, f"missing fault telemetry {key!r}"
+        assert rec["arrivals_per_round"] >= 0.0
+        assert rec["retries"] >= 0
+
     def test_scenario_fleet_adaptive_counterpoint(self, tmp_path,
                                                   monkeypatch, capsys):
         # --attack colluding --strategy multi-krum swaps the hostile

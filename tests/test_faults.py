@@ -1,0 +1,324 @@
+"""Fault-tolerant round execution: mid-round fault injection
+(``FaultSchedule``/the ``outage`` preset), deadline rounds with
+over-provisioning + quorum + exponential retry backoff, and the
+all-timed-out no-op contract on both server representations.
+
+Property tests ride on ``_propcheck`` (hypothesis when installed, a
+deterministic fallback otherwise): deadline backoff is monotone
+non-decreasing under consecutive quorum failures, capped, and resets on
+success; partial-wave weight renormalization gives survivors a unit
+simplex and dropped clients exactly zero.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _helpers import init_mlp_params, mlp_accuracy, mlp_loss
+from _propcheck import given, settings, st
+from repro.core import AggregationConfig, compute_weights
+from repro.data.synthetic import make_synth_femnist
+from repro.federated import (
+    FederatedSimulation,
+    FedSimConfig,
+    ScenarioConfig,
+    deadline_backoff_step,
+    fault_survival,
+    make_fleet,
+    overprovisioned_round_size,
+    participation,
+)
+from repro.federated.scenarios import NEVER_FAILS, make_fault_schedule
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    return make_synth_femnist(num_clients=12, mean_samples=16, seed=5)
+
+
+@pytest.fixture(scope="module")
+def mlp_params():
+    return init_mlp_params(jax.random.key(1), hidden=32)
+
+
+def _cfg(**kw):
+    kw.setdefault("aggregation", AggregationConfig(priority=(2, 0, 1)))
+    kw.setdefault("fraction", 0.34)
+    kw.setdefault("batch_size", 8)
+    kw.setdefault("local_epochs", 1)
+    kw.setdefault("lr", 0.1)
+    kw.setdefault("max_rounds", 4)
+    return FedSimConfig(**kw)
+
+
+def _run(data, params, **kw):
+    sim = FederatedSimulation(data, params, mlp_loss, mlp_accuracy,
+                              _cfg(**kw))
+    return sim.run(targets=(0.99,), device_fracs=(0.99,), verbose=False)
+
+
+# ----------------------------------------------------------------------
+class TestFaultSchedule:
+    def test_outage_preset_carries_faults(self):
+        fleet = make_fleet(ScenarioConfig(preset="outage", seed=3), 64)
+        f = fleet.faults
+        assert f is not None
+        cp = np.asarray(f.crash_prob)
+        assert (cp >= 0).all() and (cp <= 1).all()
+        fr = np.asarray(f.fail_round)
+        assert ((fr == NEVER_FAILS) | (fr >= fleet.period)).all()
+        # a fail_frac slice of the fleet really departs
+        assert (fr != NEVER_FAILS).any()
+        reg = np.asarray(f.region)
+        assert (reg >= 0).all() and (reg < f.num_regions).all()
+
+    def test_other_presets_have_no_faults(self):
+        for preset in ("uniform", "tiered-fleet", "flaky-network"):
+            assert make_fleet(ScenarioConfig(preset=preset), 16).faults is None
+
+    def test_departed_client_never_returns(self):
+        """Persistent departure: survival is zero for every round at or
+        after fail_round, regardless of the crash/outage draws."""
+        fleet = make_fleet(ScenarioConfig(preset="outage", seed=9), 32)
+        f = fleet.faults
+        gone = int(np.flatnonzero(np.asarray(f.fail_round) != NEVER_FAILS)[0])
+        fail_at = int(f.fail_round[gone])
+        sel = jnp.asarray([gone], jnp.int32)
+        for rnd in range(fail_at, fail_at + 8):
+            s = fault_survival(f, sel, jnp.int32(rnd), jax.random.key(rnd))
+            assert float(s[0]) == 0.0
+
+    def test_certain_crash_never_survives(self):
+        cfg = ScenarioConfig(preset="outage", seed=0, crash_prob=1.0,
+                             fail_frac=0.0, outage_prob=0.0)
+        f = make_fault_schedule(jax.random.key(0), 8, cfg)
+        # crash_prob samples in [0.5x, 1.5x] clipped to 1 — force exact 1
+        assert (np.asarray(f.crash_prob) > 0).all()
+        f_sure = dataclasses.replace(f, crash_prob=jnp.ones_like(f.crash_prob))
+        s = fault_survival(f_sure, jnp.arange(8), jnp.int32(1),
+                           jax.random.key(1))
+        np.testing.assert_array_equal(np.asarray(s), 0.0)
+
+    def test_outage_is_regionally_correlated(self):
+        """With outage_prob=1 every region is dark every window: nobody
+        survives — the failure wave is correlated, not i.i.d."""
+        cfg = ScenarioConfig(preset="outage", seed=0, crash_prob=0.0,
+                             fail_frac=0.0, outage_prob=1.0)
+        f = make_fault_schedule(jax.random.key(2), 16, cfg)
+        s = fault_survival(f, jnp.arange(16), jnp.int32(0), jax.random.key(0))
+        np.testing.assert_array_equal(np.asarray(s), 0.0)
+
+    def test_outage_wave_shared_within_window(self):
+        """Clients in the same region see the same dark/up draw inside
+        one outage window (the draw keys off window, not client)."""
+        fleet = make_fleet(ScenarioConfig(preset="outage", seed=4,
+                                          crash_prob=0.0, fail_frac=0.0,
+                                          outage_prob=0.5), 64)
+        f = fleet.faults
+        reg = np.asarray(f.region)
+        sel = jnp.arange(64)
+        s = np.asarray(fault_survival(f, sel, jnp.int32(2),
+                                      jax.random.key(7)))
+        for r in range(f.num_regions):
+            vals = s[reg == r]
+            if len(vals):
+                assert (vals == vals[0]).all()
+
+    def test_participation_composes_faults(self):
+        """An outage fleet's participation mask is the fault-free mask
+        further thinned by fault survival — never wider."""
+        key = jax.random.key(11)
+        fleet = make_fleet(ScenarioConfig(preset="outage", seed=6), 32)
+        bare = dataclasses.replace(fleet, faults=None)
+        sel = jnp.arange(16)
+        for rnd in range(6):
+            m_f, _ = participation(fleet, sel, jnp.int32(rnd),
+                                   jax.random.fold_in(key, rnd))
+            m_b, _ = participation(bare, sel, jnp.int32(rnd),
+                                   jax.random.fold_in(key, rnd))
+            assert (np.asarray(m_f) <= np.asarray(m_b) + 1e-9).all()
+
+
+# ----------------------------------------------------------------------
+class TestOverprovision:
+    def test_sizes(self):
+        assert overprovisioned_round_size(4, 0.0, 100) == 4
+        assert overprovisioned_round_size(4, 0.5, 100) == 6
+        assert overprovisioned_round_size(4, 0.1, 100) == 5   # ceil
+        assert overprovisioned_round_size(4, 10.0, 10) == 10  # clamp to K
+
+    def test_negative_raises(self):
+        with pytest.raises(ValueError):
+            overprovisioned_round_size(4, -0.1, 100)
+
+    def test_config_wires_round_size(self, small_data, mlp_params):
+        sim = FederatedSimulation(
+            small_data, mlp_params, mlp_loss, mlp_accuracy,
+            _cfg(scenario=ScenarioConfig(preset="tiered-fleet"),
+                 deadline=2.0, overprovision=0.5, quorum=0.5))
+        assert sim._num_sel == 6      # ceil(4 * 1.5)
+        assert sim._quorum_n == 2     # ceil(0.5 * 4): base cohort, not 6
+
+
+# ----------------------------------------------------------------------
+class TestDeadlineConfigValidation:
+    def test_overprovision_requires_deadline(self, small_data, mlp_params):
+        with pytest.raises(ValueError, match="overprovision"):
+            FederatedSimulation(small_data, mlp_params, mlp_loss,
+                                mlp_accuracy, _cfg(overprovision=0.5))
+
+    def test_quorum_requires_deadline(self, small_data, mlp_params):
+        with pytest.raises(ValueError, match="quorum"):
+            FederatedSimulation(small_data, mlp_params, mlp_loss,
+                                mlp_accuracy, _cfg(quorum=0.5))
+
+    def test_backoff_below_one_raises(self, small_data, mlp_params):
+        with pytest.raises(ValueError, match="deadline_backoff"):
+            FederatedSimulation(
+                small_data, mlp_params, mlp_loss, mlp_accuracy,
+                _cfg(deadline=1.0, deadline_backoff=0.5))
+
+    def test_cap_below_base_raises(self, small_data, mlp_params):
+        with pytest.raises(ValueError, match="deadline_cap"):
+            FederatedSimulation(
+                small_data, mlp_params, mlp_loss, mlp_accuracy,
+                _cfg(deadline=2.0, deadline_cap=1.0))
+
+    def test_dp_accounting_incompatible(self, small_data, mlp_params):
+        from repro.federated import ClippedDPStrategy
+
+        with pytest.raises(ValueError, match="DP"):
+            FederatedSimulation(
+                small_data, mlp_params, mlp_loss, mlp_accuracy,
+                _cfg(deadline=2.0, dp_delta=1e-5,
+                     strategy=ClippedDPStrategy(clip_norm=1.0,
+                                                noise_multiplier=1.0,
+                                                uniform_weights=True)))
+
+
+# ----------------------------------------------------------------------
+class TestDeadlineRounds:
+    @pytest.mark.parametrize("flat", [False, True], ids=["pytree", "flat"])
+    def test_all_timed_out_round_is_noop(self, small_data, mlp_params, flat):
+        """A deadline below every sampled completion time starves each
+        round: the global model never moves, every round retries with
+        backoff, and the effective deadline saturates at the cap —
+        the all-timed-out contract, on both server representations."""
+        res = _run(small_data, mlp_params,
+                   scenario=ScenarioConfig(preset="tiered-fleet", seed=2),
+                   deadline=1e-3, quorum=0.5, deadline_cap=8e-3,
+                   flat_params=flat)
+        assert [m.participants for m in res.metrics] == [0] * len(res.metrics)
+        assert all(m.arrivals == 0.0 for m in res.metrics)
+        assert sum(m.retries for m in res.metrics) == 4   # every round
+        # saturated backoff: 1e-3 ->2e-3 ->4e-3 ->8e-3 (cap)
+        assert res.metrics[-1].deadline == pytest.approx(8e-3)
+        final = jax.tree.leaves(res.final_params)
+        init = jax.tree.leaves(mlp_params)
+        for a, b in zip(final, init):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_failed_round_charges_the_deadline(self, small_data, mlp_params):
+        """An abandoned wave costs the effective deadline it waited out
+        (the backoff sequence's prefix sum), not the dead-round 1.0."""
+        res = _run(small_data, mlp_params,
+                   scenario=ScenarioConfig(preset="tiered-fleet", seed=2),
+                   deadline=1e-3, quorum=0.5, deadline_cap=8e-3,
+                   max_rounds=4, eval_every=1)
+        sim_t = [m.sim_time for m in res.metrics]
+        # atol: sim_time accumulates 1.0 + (eff - 1.0) in f32, so tiny
+        # deadlines round at the f32 ulp of 1.0 (~1e-7)
+        np.testing.assert_allclose(
+            sim_t, np.cumsum([1e-3, 2e-3, 4e-3, 8e-3]), atol=1e-6)
+
+    def test_deadline_caps_the_clock(self, small_data, mlp_params):
+        """Deadline sync's virtual clock never charges more than the
+        deadline per committed round — on tiered-fleet (stragglers up to
+        4x) it reaches the same round count in less simulated time than
+        barrier sync."""
+        scen = ScenarioConfig(preset="tiered-fleet", seed=0)
+        barrier = _run(small_data, mlp_params, scenario=scen, max_rounds=6)
+        dl = _run(small_data, mlp_params, scenario=scen, max_rounds=6,
+                  deadline=2.0, overprovision=0.5, quorum=0.25)
+        assert dl.metrics[-1].sim_time < barrier.metrics[-1].sim_time
+        # per-block increments bounded by block * deadline (commits) or
+        # the backed-off deadline (retries); with cap 16 this holds loosely
+        assert all(np.isfinite(m.global_acc) for m in dl.metrics)
+
+    def test_partial_wave_still_learns(self, small_data, mlp_params):
+        """Timeouts drop some arrivals but committed rounds still move
+        the model."""
+        res = _run(small_data, mlp_params,
+                   scenario=ScenarioConfig(preset="tiered-fleet", seed=1),
+                   deadline=2.0, overprovision=0.5, quorum=0.25)
+        assert any(m.participants > 0 for m in res.metrics)
+        assert sum(m.timeouts for m in res.metrics) > 0  # 4x tier times out
+        final = jax.tree.leaves(res.final_params)
+        init = jax.tree.leaves(mlp_params)
+        moved = any(
+            not np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(final, init))
+        assert moved
+
+    def test_default_config_unchanged(self, small_data, mlp_params):
+        """deadline=None traces the exact pre-fault program: identical
+        trajectory to the same run before this feature existed (the
+        golden suite pins this globally; here we pin the scenario run)."""
+        a = _run(small_data, mlp_params,
+                 scenario=ScenarioConfig(preset="tiered-fleet", seed=0))
+        b = _run(small_data, mlp_params,
+                 scenario=ScenarioConfig(preset="tiered-fleet", seed=0))
+        assert [m.global_acc for m in a.metrics] == \
+               [m.global_acc for m in b.metrics]
+        assert all(m.deadline == 0.0 and m.retries == 0 for m in a.metrics)
+
+
+# ----------------------------------------------------------------------
+class TestBackoffProperties:
+    @settings(max_examples=12)
+    @given(st.floats(0.1, 4.0), st.floats(1.0, 3.0), st.floats(1.0, 8.0),
+           st.integers(1, 10))
+    def test_consecutive_failures_monotone_and_capped(self, base, factor,
+                                                      cap_mult, n_fail):
+        cap = base * cap_mult
+        eff = jnp.float32(base)
+        prev = float(eff)
+        for _ in range(n_fail):
+            eff = deadline_backoff_step(eff, jnp.bool_(False), base, factor,
+                                        cap)
+            cur = float(eff)
+            assert cur >= prev - 1e-6          # monotone non-decreasing
+            assert cur <= max(base, cap) + 1e-5  # capped
+            prev = cur
+
+    @settings(max_examples=12)
+    @given(st.floats(0.1, 4.0), st.floats(1.0, 3.0), st.integers(0, 6))
+    def test_success_resets_to_base(self, base, factor, n_fail):
+        cap = 8.0 * base
+        eff = jnp.float32(base)
+        for _ in range(n_fail):
+            eff = deadline_backoff_step(eff, jnp.bool_(False), base, factor,
+                                        cap)
+        eff = deadline_backoff_step(eff, jnp.bool_(True), base, factor, cap)
+        assert float(eff) == pytest.approx(base, rel=1e-6)
+
+
+class TestRenormalizationProperties:
+    @settings(max_examples=12)
+    @given(st.integers(0, 10_000), st.integers(2, 12))
+    def test_survivor_weights_form_a_simplex(self, seed, n):
+        """Partial-wave renormalization: whatever subset the deadline
+        drops, the surviving clients' weights sum to 1 and every dropped
+        client contributes exactly zero."""
+        rng = np.random.default_rng(seed)
+        c = jnp.asarray(rng.uniform(0.05, 1.0, size=(n, 3)), jnp.float32)
+        on_time = rng.integers(0, 2, size=n).astype(np.float32)
+        if on_time.sum() == 0:
+            on_time[int(rng.integers(0, n))] = 1.0   # keep one survivor
+        p = np.asarray(compute_weights(c, AggregationConfig(),
+                                       mask=jnp.asarray(on_time)))
+        assert p[on_time == 0.0].max(initial=0.0) == 0.0
+        np.testing.assert_allclose(p.sum(), 1.0, rtol=1e-5)
+        assert (p >= 0).all()
